@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (benchmarks/run.py
+contract): ``us_per_call`` is median wall time of the jitted call on this
+CPU; ``derived`` carries the paper-facing quantity (recall, rho, ratio, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Tuple
+
+import jax
+
+
+def time_call(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 3
+              ) -> float:
+    """Median wall-clock microseconds per call (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: Any) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def fmt(x: float, nd: int = 4) -> str:
+    return f"{x:.{nd}f}"

@@ -1,0 +1,75 @@
+"""Fig 2: probed item-recall curves for top-10 MIPS.
+
+3 datasets (Netflix-like, Yahoo!Music-like, ImageNet-like norm profiles,
+data/synthetic.py) x code lengths {16, 32, 64} x algorithms
+{RANGE-LSH, SIMPLE-LSH, L2-ALSH}. RANGE-LSH uses the paper's protocol:
+32/64/128 sub-datasets at L = 16/32/64, index bits charged to the budget.
+
+Derived: recall@{0.5%, 2%, 10%} of items probed, plus the probe-count
+ratio SIMPLE/RANGE at recall 0.5 (the paper's headline "order of magnitude
+fewer probes").
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fmt, time_call
+from repro.core import l2_alsh, range_lsh, simple_lsh, topk
+from repro.data.synthetic import make_dataset
+
+SIZES = {"netflix": 17770, "yahoomusic": 20000, "imagenet": 50000}
+M_FOR_L = {16: 32, 32: 64, 64: 128}
+K = 10
+
+
+def probe_curve(order, truth, grid):
+    return topk.probed_recall_curve(order, truth, grid)
+
+
+def probes_to_recall(order, truth, target: float, n: int) -> int:
+    """Smallest probe count reaching ``target`` recall (log-grid search)."""
+    grid = np.unique(np.geomspace(K, n, 48).astype(int))
+    rec = np.asarray(topk.probed_recall_curve(order, truth, list(grid)))
+    idx = np.argmax(rec >= target)
+    if rec[idx] < target:
+        return n
+    return int(grid[idx])
+
+
+def main() -> None:
+    for name, n in SIZES.items():
+        ds = make_dataset(name, jax.random.PRNGKey(0), n=n, num_queries=100)
+        _, truth = topk.exact_mips(ds.queries, ds.items, K)
+        for L in (16, 32, 64):
+            m = M_FOR_L[L]
+            key = jax.random.PRNGKey(L)
+            indexes = {
+                "range": range_lsh.build(ds.items, key, L, m),
+                "simple": simple_lsh.build(ds.items, key, L),
+                "l2alsh": l2_alsh.build(ds.items, key, L),
+            }
+            orders = {}
+            for algo, idx in indexes.items():
+                mod = {"range": range_lsh, "simple": simple_lsh,
+                       "l2alsh": l2_alsh}[algo]
+                us = time_call(lambda mod=mod, idx=idx:
+                               mod.probe_order(idx, ds.queries),
+                               warmup=1, iters=1)
+                order = mod.probe_order(idx, ds.queries)
+                orders[algo] = order
+                grid = [max(K, int(n * f)) for f in (0.005, 0.02, 0.10)]
+                rec = probe_curve(order, truth, grid)
+                emit(f"fig2_{name}_L{L}_{algo}", us,
+                     f"r@0.5%={fmt(float(rec[0]))}"
+                     f"|r@2%={fmt(float(rec[1]))}"
+                     f"|r@10%={fmt(float(rec[2]))}")
+            p_simple = probes_to_recall(orders["simple"], truth, 0.5, n)
+            p_range = probes_to_recall(orders["range"], truth, 0.5, n)
+            emit(f"fig2_{name}_L{L}_speedup", 0.0,
+                 f"probes_simple={p_simple}|probes_range={p_range}"
+                 f"|ratio={fmt(p_simple / max(p_range, 1), 2)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig 3(b): influence of the number of sub-datasets (Yahoo!Music-like,
+L=32, m in {8, 32, 64, 128, 256}). The paper: performance improves with m
+while m is small, then stabilizes. Note larger m also spends more of the
+code budget on index bits (ceil(log2 m)) — the saturation is the
+interesting regime."""
+
+import jax
+
+from benchmarks.common import emit, fmt, time_call
+from repro.core import range_lsh, topk
+from repro.data.synthetic import make_dataset
+
+
+def main() -> None:
+    ds = make_dataset("yahoomusic", jax.random.PRNGKey(0), n=20000,
+                      num_queries=100)
+    _, truth = topk.exact_mips(ds.queries, ds.items, 10)
+    n = ds.items.shape[0]
+    grid = [max(10, int(n * 0.02))]
+    for m in (8, 32, 64, 128, 256):
+        idx = range_lsh.build(ds.items, jax.random.PRNGKey(1), 32, m)
+        us = time_call(lambda idx=idx: range_lsh.probe_order(idx, ds.queries),
+                       warmup=1, iters=1)
+        rec = topk.probed_recall_curve(
+            range_lsh.probe_order(idx, ds.queries), truth, grid)
+        emit(f"fig3b_m{m}", us,
+             f"r@2%={fmt(float(rec[0]))}|hash_bits={idx.hash_bits}")
+
+
+if __name__ == "__main__":
+    main()

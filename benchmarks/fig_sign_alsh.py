@@ -1,0 +1,50 @@
+"""SIGN-ALSH baseline + its norm-ranged variant (beyond-paper §5 analog).
+
+The paper cites SIGN-ALSH as the strongest prior baseline that SIMPLE-LSH
+supersedes; this reproduces its position in the ranking
+(RANGE > SIMPLE > SIGN-ALSH >~ L2-ALSH on long-tail data) and shows norm
+ranging lifts SIGN-ALSH too — the partitioning idea is algorithm-generic.
+"""
+
+import jax
+
+from benchmarks.common import emit, fmt, time_call
+from repro.core import range_lsh, sign_alsh, simple_lsh, topk
+from repro.data.synthetic import make_dataset
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=20000,
+                      num_queries=100)
+    _, truth = topk.exact_mips(ds.queries, ds.items, 10)
+    n = ds.items.shape[0]
+    grid = [max(10, int(n * f)) for f in (0.02, 0.10)]
+    L = 32
+    key = jax.random.PRNGKey(1)
+
+    variants = {
+        "sign_alsh": sign_alsh.build(ds.items, key, L),
+        "sign_alsh_ranged": sign_alsh.build(ds.items, key, L,
+                                            num_ranges=32),
+    }
+    for name, idx in variants.items():
+        us = time_call(lambda idx=idx: sign_alsh.probe_order(
+            idx, ds.queries), warmup=0, iters=1)
+        rec = topk.probed_recall_curve(
+            sign_alsh.probe_order(idx, ds.queries), truth, grid)
+        emit(f"{name}_L{L}", us,
+             f"r@2%={fmt(float(rec[0]))}|r@10%={fmt(float(rec[1]))}")
+
+    # context rows: where it sits vs simple / range at the same budget
+    si = simple_lsh.build(ds.items, key, L)
+    ri = range_lsh.build(ds.items, key, L, 64)
+    for name, mod, idx in (("simple", simple_lsh, si),
+                           ("range", range_lsh, ri)):
+        rec = topk.probed_recall_curve(
+            mod.probe_order(idx, ds.queries), truth, grid)
+        emit(f"context_{name}_L{L}", 0.0,
+             f"r@2%={fmt(float(rec[0]))}|r@10%={fmt(float(rec[1]))}")
+
+
+if __name__ == "__main__":
+    main()

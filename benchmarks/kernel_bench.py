@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks + projected TPU roofline placement.
+
+Wall time here is the XLA:CPU reference path (the production fallback);
+the derived column adds each kernel's arithmetic intensity and its
+projected TPU v5e time at the binding roofline term — the quantity the
+BlockSpec tiling was designed against (DESIGN.md §7).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fmt, time_call
+from repro.kernels import ops
+from repro.parallel.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+N, D, L, Q = 100000, 128, 128, 256
+W = L // 32
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    A = jax.random.normal(jax.random.PRNGKey(1), (D, L))
+    tail = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (N,)))
+    at = jax.random.normal(jax.random.PRNGKey(3), (L,))
+
+    # hash_encode: N*D*L MACs -> N*L bits out
+    us = time_call(lambda: ops.hash_encode(x, A, tail, at))
+    flops = 2 * N * D * L
+    bytes_ = (N * D + D * L) * 4 + N * W * 4
+    ai = flops / bytes_
+    tpu_t = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    emit("kernel_hash_encode", us,
+         f"AI={fmt(ai, 1)}|tpu_us={fmt(tpu_t * 1e6, 1)}"
+         f"|bound={'compute' if flops / PEAK_FLOPS > bytes_ / HBM_BW else 'memory'}")
+
+    qc = jax.random.bits(key, (Q, W), jnp.uint32)
+    dc = jax.random.bits(jax.random.PRNGKey(4), (N, W), jnp.uint32)
+    us = time_call(lambda: ops.hamming_scan(qc, dc))
+    ops_ = Q * N * W * 3          # xor + popcnt + add
+    bytes_ = (Q * W + N * W) * 4 + Q * N * 4
+    tpu_t = max(ops_ / PEAK_FLOPS, bytes_ / HBM_BW)
+    emit("kernel_hamming", us,
+         f"AI={fmt(ops_ / bytes_, 2)}|tpu_us={fmt(tpu_t * 1e6, 1)}|bound=memory")
+
+    q = jax.random.normal(key, (Q, D))
+    us = time_call(lambda: ops.mips_topk(q, x, 10))
+    flops = 2 * Q * N * D
+    bytes_ = (Q * D + N * D) * 4
+    tpu_t = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    emit("kernel_mips_topk", us,
+         f"AI={fmt(flops / bytes_, 1)}|tpu_us={fmt(tpu_t * 1e6, 1)}"
+         f"|bound={'compute' if flops / PEAK_FLOPS > bytes_ / HBM_BW else 'memory'}")
+
+    # Pallas interpret-mode correctness spot check (tiny shape)
+    xs, As = x[:256, :64], A[:64, :32]
+    o1 = ops.hash_encode(xs, As, tail[:256], at[:32], impl="pallas")
+    o2 = ops.hash_encode(xs, As, tail[:256], at[:32], impl="ref")
+    emit("kernel_pallas_spotcheck", 0.0,
+         f"encode_match={bool((o1 == o2).all())}")
+
+
+if __name__ == "__main__":
+    main()

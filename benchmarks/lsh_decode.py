@@ -1,0 +1,48 @@
+"""Beyond-paper integration: LSH-decode on an LM vocabulary.
+
+Builds a RANGE-LSH index over a (reduced) LM's unembedding and measures
+top-1 agreement with exact greedy decoding as a function of probed vocab
+rows — the paper's probes/recall trade-off (Fig 2) transplanted to token
+search. Also times exact vs LSH head.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fmt, time_call
+from repro.configs.base import get_config
+from repro.models import lm, lm_head
+
+
+def main() -> None:
+    cfg = get_config("qwen3_0_6b").reduced()
+    # widen vocab so the index has something to do
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab=8192)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    B = 64
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.d_model))
+    _, exact_ids = lm_head.exact_topk_tokens(hidden, unembed, 1,
+                                             true_vocab=cfg.vocab)
+    us_exact = time_call(lambda: lm_head.exact_topk_tokens(
+        hidden, unembed, 1, true_vocab=cfg.vocab))
+
+    index = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(2),
+                                      code_len=128, num_ranges=64)
+    for probe in (64, 256, 1024):
+        us = time_call(lambda probe=probe: lm_head.lsh_topk_tokens(
+            index, hidden, unembed, k=1, num_probe=probe,
+            true_vocab=cfg.vocab))
+        _, ids = lm_head.lsh_topk_tokens(index, hidden, unembed, k=1,
+                                         num_probe=probe,
+                                         true_vocab=cfg.vocab)
+        agree = float(jnp.mean((ids[:, 0] == exact_ids[:, 0])
+                               .astype(jnp.float32)))
+        emit(f"lsh_decode_p{probe}", us,
+             f"top1_agree={fmt(agree)}|exact_us={fmt(us_exact, 1)}"
+             f"|probe_frac={fmt(probe / cfg.vocab, 4)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Before/after table: paper-faithful baseline vs optimized sweeps.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_compare [--mesh pod]
+Reads experiments/dryrun_baseline/ and experiments/dryrun/ and prints the
+per-cell dominant-term comparison for EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+BASE = os.path.join(HERE, "..", "experiments", "dryrun_baseline")
+OPT = os.path.join(HERE, "..", "experiments", "dryrun")
+
+
+def load(d, mesh):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and r.get("ok"):
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    base = load(BASE, args.mesh)
+    opt = load(OPT, args.mesh)
+    print("| arch | shape | baseline dominant | optimized dominant | "
+          "step-bound gain | frac before → after |")
+    print("|---|---|---|---|---|---|")
+    rows = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        tb, to = b["roofline"], o["roofline"]
+        db = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+        do = max(to["compute_s"], to["memory_s"], to["collective_s"])
+        gain = db / do if do > 0 else float("nan")
+        rows.append((gain, key, tb, to, db, do, b, o))
+    for gain, (arch, shape), tb, to, db, do, b, o in rows:
+        print(f"| {arch} | {shape} "
+              f"| {tb['bottleneck'].replace('_s','')} {fmt_s(db)} "
+              f"| {to['bottleneck'].replace('_s','')} {fmt_s(do)} "
+              f"| {gain:.2f}x "
+              f"| {tb['roofline_fraction']:.3f} → "
+              f"{to['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

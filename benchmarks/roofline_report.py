@@ -1,0 +1,58 @@
+"""Render the §Roofline table from experiments/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod]
+Prints a markdown table (pasted into EXPERIMENTS.md §Roofline) with the
+three terms, the bottleneck, MODEL_FLOPS/HLO_FLOPS and the roofline
+fraction per (arch x shape) cell.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(mesh: str, dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--dir", default=DRYRUN_DIR,
+                    help="dryrun dir (e.g. experiments/dryrun_baseline)")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.dir)
+    print(f"| arch | shape | compute | memory | collective | bottleneck "
+          f"| useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        t = r.get("roofline", {})
+        if not t:
+            continue
+        ratio = r.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.3f}" if ratio else "-"
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} "
+              f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
+              f"| {t['bottleneck'].replace('_s', '')} "
+              f"| {ratio_s} | {t['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

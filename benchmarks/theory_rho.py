@@ -1,0 +1,80 @@
+"""Theorem 1 + eq. 13 verification.
+
+(1) rho_j = G(c, S0/U_j) <= rho = G(c, S0/U) for every range, strict when
+    U_j < U (Theorem 1's premise);
+(2) the eq.-11 complexity ratio f(n) / (n^rho log n) -> 0 as n grows under
+    the alpha/beta conditions;
+(3) eq. 13 (ranged L2-ALSH) < eq. 7 (plain) across an (S0, c) grid.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fmt, time_call
+from repro.core.partition import effective_upper, percentile_partition
+from repro.core.rho import (query_complexity_ratio, rho_l2_alsh,
+                            rho_ranged_l2_alsh, rho_ranged_simple_lsh,
+                            rho_simple_lsh, theorem1_conditions)
+from repro.data.synthetic import make_dataset
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=20000,
+                      num_queries=10)
+    norms = jnp.linalg.norm(ds.items, axis=1)
+    part = percentile_partition(norms, 32)
+    upper = effective_upper(part) / jnp.max(norms)   # scale: U == 1
+    c, S0 = jnp.asarray(0.7), jnp.asarray(0.5)
+    rho = float(rho_simple_lsh(c, S0))
+    rho_j = rho_ranged_simple_lsh(c, S0, upper)
+    us = time_call(lambda: rho_ranged_simple_lsh(c, S0, upper))
+    n_le = int(jnp.sum(rho_j <= rho + 1e-9))
+    n_strict = int(jnp.sum(rho_j < rho - 1e-6))
+    emit("thm1_rho_j_le_rho", us,
+         f"all_le={n_le == 32}|strict={n_strict}/32|rho={fmt(rho)}")
+
+    rho_star = float(jnp.max(jnp.where(rho_j < rho - 1e-6, rho_j, -jnp.inf)))
+    alpha = 0.9 * min(rho, (rho - rho_star) / (1 - rho_star))
+    beta = 0.5 * alpha * rho
+    ok = theorem1_conditions(rho, rho_star, alpha, beta)
+    ratios = [query_complexity_ratio(float(n), alpha, beta, rho, rho_star)
+              for n in (1e4, 1e6, 1e8)]
+    emit("thm1_complexity_ratio", 0.0,
+         f"feasible={ok}|r(1e4)={fmt(ratios[0], 3)}"
+         f"|r(1e6)={fmt(ratios[1], 3)}|r(1e8)={fmt(ratios[2], 3)}"
+         f"|vanishing={ratios[2] < ratios[1] < ratios[0]}")
+
+    # eq. 13 < eq. 7: partitioning admits a per-range scaling U_j bounded
+    # only by U_j * u_hi < 1 (vs the global U * max_norm < 1), and the
+    # (U_j u)^{2^{m+1}} tails tighten both sides — "more flexibility for
+    # parameter optimization" (§5). For each percentile range of a
+    # long-tail norm profile (max normalized to 1), compare the best
+    # eq.-13 rho_j against eq.-7 at the same (S0=u_hi, c).
+    norms_n = norms / jnp.max(norms)
+    part8 = percentile_partition(norms_n, 8)
+    u8 = effective_upper(part8)
+    lo8 = part8.lower
+    cc = jnp.asarray(0.7)
+    wins = total = 0
+    gaps = []
+    for j in range(8):
+        u_hi = float(u8[j])
+        u_lo = float(lo8[j])
+        s0 = jnp.asarray(u_hi)
+        plain = float(rho_l2_alsh(s0, cc, 3, 0.83, 2.5))
+        best = plain
+        for uj in jnp.linspace(0.1, 0.99 / u_hi, 24):
+            r13 = float(rho_ranged_l2_alsh(s0, cc, 3, float(uj), 2.5,
+                                           jnp.asarray(u_lo),
+                                           jnp.asarray(u_hi)))
+            if jnp.isfinite(r13) and 0 < r13 < best:
+                best = r13
+        total += 1
+        wins += int(best < plain - 1e-6)
+        gaps.append(plain - best)
+    emit("eq13_lt_eq7", 0.0,
+         f"wins={wins}/{total}|mean_gap={fmt(float(jnp.mean(jnp.asarray(gaps))), 3)}")
+
+
+if __name__ == "__main__":
+    main()

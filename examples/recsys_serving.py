@@ -1,0 +1,58 @@
+"""The paper's own application end-to-end: recommendation serving.
+
+    PYTHONPATH=src python examples/recsys_serving.py
+
+1. ALS matrix factorization over a synthetic rating matrix (the paper used
+   ALS on Netflix / Yahoo!Music — Yun et al. 2013).
+2. Item embeddings -> sharded RANGE-LSH index (norm-range == shard
+   boundary); user embeddings are the queries.
+3. Batched top-10 retrieval through the distributed engine
+   (core/distributed.py), validated against exact MIPS.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed, topk
+from repro.data.als import als_factorize, synthetic_ratings
+from repro.launch.mesh import make_local_mesh
+
+
+def main() -> None:
+    # 1. train embeddings
+    ratings, weights = synthetic_ratings(jax.random.PRNGKey(0),
+                                         n_users=400, n_items=4000,
+                                         density=0.08)
+    t0 = time.time()
+    state = als_factorize(ratings, weights, rank=32,
+                          key=jax.random.PRNGKey(1), iters=8)
+    print(f"ALS: observed-MSE {float(state.loss):.4f} "
+          f"({time.time() - t0:.1f}s)")
+    norms = jnp.linalg.norm(state.items, axis=1)
+    print(f"item norms: max/median = "
+          f"{float(jnp.max(norms) / jnp.median(norms)):.2f}")
+
+    # 2. index (sharded across whatever devices exist locally)
+    mesh = make_local_mesh()
+    index = distributed.build(state.items, jax.random.PRNGKey(2),
+                              code_len=32, num_ranges=32,
+                              num_shards=mesh.shape["data"])
+    index = distributed.shard_index(index, mesh)
+
+    # 3. serve a batch of user queries
+    users = state.users[:64]
+    t0 = time.time()
+    vals, ids = distributed.query(index, users, k=10,
+                                  num_probe_per_shard=400, mesh=mesh)
+    jax.block_until_ready(vals)
+    dt = (time.time() - t0) * 1e3
+    _, truth = topk.exact_mips(users, state.items, 10)
+    rec = float(topk.recall_at(ids, truth))
+    print(f"served {users.shape[0]} users in {dt:.1f} ms "
+          f"(recall@10 = {rec:.3f}, probing 10% of catalog)")
+
+
+if __name__ == "__main__":
+    main()

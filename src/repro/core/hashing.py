@@ -1,0 +1,226 @@
+"""LSH primitives for MIPS: transforms, hash families, collision probabilities.
+
+Implements the mathematical substrate of the paper:
+
+* sign random projection (eq. 4) and the L2 LSH family (eq. 2/3),
+* the SIMPLE-LSH symmetric transform ``P(x) = [x; sqrt(1-||x||^2)]`` (eq. 8),
+* the L2-ALSH asymmetric transforms (eq. 5) and SIGN-ALSH transforms,
+* bit packing into uint32 code words and packed Hamming distance.
+
+All functions are pure JAX and jit-friendly. The fused encoders avoid
+materializing the augmented vectors in HBM (see DESIGN.md §3): the padding
+coordinate of the SIMPLE-LSH transform contributes ``sqrt(1-||x||^2) * a_d``
+to the projection, which we add analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# norms & transforms
+# ---------------------------------------------------------------------------
+
+
+def l2_norm(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Euclidean norm along ``axis``."""
+    return jnp.sqrt(jnp.sum(jnp.square(x), axis=axis))
+
+
+def normalize(x: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
+    """Scale rows of ``x`` to unit 2-norm (queries in SIMPLE-LSH are unit)."""
+    return x / jnp.maximum(l2_norm(x, axis=axis)[..., None], eps)
+
+
+def simple_lsh_transform(x: jax.Array) -> jax.Array:
+    """SIMPLE-LSH item transform, eq. (8): ``P(x) = [x; sqrt(1-||x||^2)]``.
+
+    Requires ``||x|| <= 1`` (caller normalizes by the dataset/range max norm).
+    """
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
+    return jnp.concatenate([x, tail[..., None]], axis=-1)
+
+
+def simple_lsh_query_transform(q: jax.Array) -> jax.Array:
+    """SIMPLE-LSH query transform, eq. (8): ``P(q) = [q; 0]`` (q unit-norm)."""
+    q = normalize(q)
+    return jnp.concatenate([q, jnp.zeros(q.shape[:-1] + (1,), q.dtype)], axis=-1)
+
+
+def l2_alsh_item_transform(x: jax.Array, m: int, U: float) -> jax.Array:
+    """L2-ALSH item transform, eq. (5): ``P(x)=[Ux; ||Ux||^2; ...; ||Ux||^{2^m}]``."""
+    ux = U * x
+    n2 = jnp.sum(jnp.square(ux), axis=-1)  # ||Ux||^2
+    tails = []
+    acc = n2
+    for _ in range(m):
+        tails.append(acc)
+        acc = jnp.square(acc)  # ||Ux||^{2^{i+1}}
+    return jnp.concatenate([ux] + [t[..., None] for t in tails], axis=-1)
+
+
+def l2_alsh_query_transform(q: jax.Array, m: int) -> jax.Array:
+    """L2-ALSH query transform, eq. (5): ``Q(q) = [q; 1/2; ...; 1/2]``."""
+    q = normalize(q)
+    halves = jnp.full(q.shape[:-1] + (m,), 0.5, q.dtype)
+    return jnp.concatenate([q, halves], axis=-1)
+
+
+def sign_alsh_item_transform(x: jax.Array, m: int, U: float) -> jax.Array:
+    """SIGN-ALSH item transform (Shrivastava & Li, UAI 2015):
+    ``P(x) = [Ux; 1/2-||Ux||^2; ...; 1/2-||Ux||^{2^m}]``."""
+    ux = U * x
+    n2 = jnp.sum(jnp.square(ux), axis=-1)
+    tails = []
+    acc = n2
+    for _ in range(m):
+        tails.append(0.5 - acc)
+        acc = jnp.square(acc)
+    return jnp.concatenate([ux] + [t[..., None] for t in tails], axis=-1)
+
+
+def sign_alsh_query_transform(q: jax.Array, m: int) -> jax.Array:
+    """SIGN-ALSH query transform: ``Q(q) = [q; 0; ...; 0]``."""
+    q = normalize(q)
+    zeros = jnp.zeros(q.shape[:-1] + (m,), q.dtype)
+    return jnp.concatenate([q, zeros], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# hash families
+# ---------------------------------------------------------------------------
+
+
+def srp_projections(key: jax.Array, dim: int, n_bits: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """Random projection matrix ``A`` (dim, n_bits), entries ~ N(0, 1)."""
+    return jax.random.normal(key, (dim, n_bits), dtype)
+
+
+def srp_hash(x: jax.Array, A: jax.Array) -> jax.Array:
+    """Sign random projection, eq. (4): bit ``b = (a^T x >= 0)`` as uint8.
+
+    ``x``: (..., d) transformed vectors; ``A``: (d, L). Returns (..., L) in {0,1}.
+    """
+    return (x @ A >= 0.0).astype(jnp.uint8)
+
+
+def srp_hash_fused_simple(x: jax.Array, A: jax.Array) -> jax.Array:
+    """Fused SIMPLE-LSH encode: ``sign([x; sqrt(1-||x||^2)] @ A)`` without
+    materializing the augmentation. ``A`` has shape (d+1, L); ``x`` is the
+    already-normalized item matrix (..., d) with ``||x|| <= 1``.
+    """
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
+    proj = x @ A[:-1] + tail[..., None] * A[-1]
+    return (proj >= 0.0).astype(jnp.uint8)
+
+
+def l2_hash_params(key: jax.Array, dim: int, n_hashes: int, r: float
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Parameters of the L2 LSH family, eq. (2): ``a`` ~ N(0,I), ``b`` ~ U[0,r]."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (dim, n_hashes), jnp.float32)
+    b = jax.random.uniform(kb, (n_hashes,), jnp.float32, 0.0, r)
+    return a, b
+
+
+def l2_hash(x: jax.Array, a: jax.Array, b: jax.Array, r: float) -> jax.Array:
+    """L2 LSH, eq. (2): ``h(x) = floor((a^T x + b) / r)`` as int32."""
+    return jnp.floor((x @ a + b) / r).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# collision probabilities
+# ---------------------------------------------------------------------------
+
+
+def srp_collision_prob(cos_sim: jax.Array) -> jax.Array:
+    """Collision probability of sign random projection, eq. (4):
+    ``p = 1 - acos(s)/pi`` for cosine similarity ``s``."""
+    s = jnp.clip(cos_sim, -1.0, 1.0)
+    return 1.0 - jnp.arccos(s) / jnp.pi
+
+
+def _std_normal_cdf(x: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + jax.scipy.special.erf(x / jnp.sqrt(2.0)))
+
+
+def l2_collision_prob(d: jax.Array, r: float) -> jax.Array:
+    """Collision probability of the L2 LSH family, eq. (3):
+
+    ``F_r(d) = 1 - 2 Phi(-r/d) - (2d / (sqrt(2 pi) r)) (1 - exp(-(r/d)^2/2))``.
+    """
+    d = jnp.maximum(jnp.asarray(d, jnp.float64 if jax.config.jax_enable_x64
+                                else jnp.float32), 1e-12)
+    rd = r / d
+    return (1.0 - 2.0 * _std_normal_cdf(-rd)
+            - (2.0 * d) / (jnp.sqrt(2.0 * jnp.pi) * r)
+            * (1.0 - jnp.exp(-0.5 * rd * rd)))
+
+
+# ---------------------------------------------------------------------------
+# bit packing & Hamming distance
+# ---------------------------------------------------------------------------
+
+WORD_BITS = 32
+
+
+def packed_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits``."""
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a (..., L) array of {0,1} into (..., ceil(L/32)) uint32 words.
+
+    Bit ``i`` of word ``w`` corresponds to code bit ``32*w + i`` (LSB-first).
+    Padding bits (when L % 32 != 0) are zero in every code, so they never
+    contribute to XOR-popcount Hamming distances.
+    """
+    L = bits.shape[-1]
+    W = packed_words(L)
+    pad = W * WORD_BITS - L
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
+    b = bits.reshape(bits.shape[:-1] + (W, WORD_BITS)).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: (..., W) uint32 → (..., n_bits) uint8."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (-1,))
+    return bits[..., :n_bits].astype(jnp.uint8)
+
+
+def hamming_distance_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hamming distance between packed codes.
+
+    ``a``: (..., W), ``b``: (..., W) — broadcastable; returns int32 popcount
+    of XOR summed over the trailing word axis.
+    """
+    x = jnp.bitwise_xor(a, b)
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_matrix(q_codes: jax.Array, db_codes: jax.Array) -> jax.Array:
+    """All-pairs Hamming distances: (Q, W) × (N, W) → (Q, N) int32."""
+    return hamming_distance_packed(q_codes[:, None, :], db_codes[None, :, :])
+
+
+def encode_packed(x: jax.Array, A: jax.Array, *, fused_simple: bool = False
+                  ) -> jax.Array:
+    """Hash ``x`` with projections ``A`` and pack to uint32 codes.
+
+    With ``fused_simple=True``, ``A`` is (d+1, L) and the SIMPLE-LSH
+    augmentation is folded into the projection (x must be pre-normalized).
+    """
+    bits = srp_hash_fused_simple(x, A) if fused_simple else srp_hash(x, A)
+    return pack_bits(bits)

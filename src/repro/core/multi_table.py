@@ -1,0 +1,102 @@
+"""Multi-table single-probe LSH (the paper's supplementary comparison).
+
+The theoretical LSH guarantee uses T independent hash tables and probes
+exactly the query's bucket in each (§3.3 notes single-table multi-probe is
+the practical mode; the supplementary still compares multi-table
+single-probe RANGE-LSH vs SIMPLE-LSH). Here:
+
+  * build: T independent projection draws over the (range-)normalized
+    items -> T packed code arrays.
+  * query: a candidate is any item whose code matches the query's in >= 1
+    table; candidates rank by (match count, then eq.-12-style norm
+    scaling U_j for RANGE) and are exactly re-ranked.
+
+Dense TPU realization: per table one packed Hamming scan; a bucket match
+is hamming == 0, so the scan reuses the same kernel as multi-probe.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.partition import effective_upper, percentile_partition
+from repro.kernels import ops
+
+
+class MultiTableIndex(NamedTuple):
+    items: jax.Array       # (N, d)
+    codes: jax.Array       # (T, N, W)
+    As: jax.Array          # (T, d+1, L)
+    range_id: jax.Array    # (N,) all zeros when ranging disabled
+    upper: jax.Array       # (m,)
+    code_len: int
+    ranged: bool
+
+
+def build(items: jax.Array, key: jax.Array, code_len: int, num_tables: int,
+          *, num_ranges: int = 1, impl: str = "auto") -> MultiTableIndex:
+    norms = hashing.l2_norm(items)
+    ranged = num_ranges > 1
+    if ranged:
+        part = percentile_partition(norms, num_ranges)
+        upper = effective_upper(part)
+        rid = part.range_id
+    else:
+        upper = jnp.max(norms)[None]
+        rid = jnp.zeros((items.shape[0],), jnp.int32)
+    x = items / upper[rid][:, None]
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
+
+    keys = jax.random.split(key, num_tables)
+    codes = []
+    As = []
+    for t in range(num_tables):
+        A = hashing.srp_projections(keys[t], items.shape[-1] + 1, code_len)
+        codes.append(ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl))
+        As.append(A)
+    return MultiTableIndex(items, jnp.stack(codes), jnp.stack(As), rid,
+                           upper, code_len, ranged)
+
+
+def candidate_scores(index: MultiTableIndex, queries: jax.Array, *,
+                     impl: str = "auto") -> jax.Array:
+    """(Q, N) score = #tables with an exact bucket match, norm-scaled for
+    ranged indexes (0 => not a candidate)."""
+    q = hashing.normalize(queries)
+    zeros = jnp.zeros((q.shape[0],), q.dtype)
+    counts = jnp.zeros((q.shape[0], index.items.shape[0]), jnp.int32)
+    T = index.codes.shape[0]
+    for t in range(T):
+        A = index.As[t]
+        qc = ops.hash_encode(q, A[:-1], zeros, A[-1], impl=impl)
+        ham = ops.hamming_scan(qc, index.codes[t], impl=impl)
+        counts = counts + (ham == 0).astype(jnp.int32)
+    scores = counts.astype(jnp.float32)
+    if index.ranged:
+        scores = scores * index.upper[index.range_id][None, :]
+    return scores
+
+
+def query(index: MultiTableIndex, queries: jax.Array, k: int, *,
+          max_candidates: int = 512, impl: str = "auto"
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-probe query: exact re-rank restricted to true candidates
+    (score > 0). Returns (vals, ids, num_candidates (Q,)); slots beyond
+    the candidate count come back as (-inf, -1)."""
+    scores = candidate_scores(index, queries, impl=impl)
+    n_cand = jnp.sum((scores > 0).astype(jnp.int32), axis=1)
+    order = jnp.argsort(-scores, axis=1, stable=True)
+    top = order[:, :max_candidates]                       # (Q, C)
+    top_scores = jnp.take_along_axis(scores, top, axis=1)
+    cand_vec = index.items[top]                           # (Q, C, d)
+    ip = jnp.einsum("qd,qcd->qc", queries.astype(jnp.float32),
+                    cand_vec.astype(jnp.float32))
+    ip = jnp.where(top_scores > 0, ip, -jnp.inf)
+    vals, pos = jax.lax.top_k(ip, k)
+    ids = jnp.take_along_axis(top, pos, axis=1)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return vals, ids, n_cand

@@ -1,0 +1,96 @@
+"""Norm-range partitioning (Algorithm 1, lines 3-4; §4 uniform variant).
+
+Partitions a dataset into ``m`` sub-datasets so that items with similar
+2-norms land in the same sub-dataset:
+
+* :func:`percentile_partition` — rank items by 2-norm (ties broken by index,
+  i.e. "arbitrarily" per Algorithm 1) and split ranks into m equal slabs.
+* :func:`uniform_partition` — split the norm *domain* [min, max] into m
+  equal-width bins (Fig 3a alternative).
+
+Both return a :class:`Partition` whose ``range_id`` is sorted-compatible:
+range j holds norms <= range j+1 (up to ties), so assigning contiguous
+ranges to contiguous device shards keeps the norm-range boundary aligned
+with the placement boundary (DESIGN.md §3 "partition-as-shard").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Partition(NamedTuple):
+    """Partition of ``n`` items into ``m`` norm ranges.
+
+    Attributes:
+      range_id: (n,) int32 — sub-dataset index of each item, in [0, m).
+      upper:    (m,) f32   — ``U_j = max_{x in S_j} ||x||`` (0 for empty ranges).
+      lower:    (m,) f32   — ``u_{j-1} = min 2-norm in S_j`` (§5 needs it).
+      counts:   (m,) int32 — items per range.
+    """
+
+    range_id: jax.Array
+    upper: jax.Array
+    lower: jax.Array
+    counts: jax.Array
+
+    @property
+    def num_ranges(self) -> int:
+        return self.upper.shape[0]
+
+
+def _range_stats(norms: jax.Array, range_id: jax.Array, m: int) -> Partition:
+    ones = jnp.ones_like(norms)
+    counts = jnp.zeros((m,), jnp.int32).at[range_id].add(1)
+    upper = jnp.zeros((m,), norms.dtype).at[range_id].max(norms)
+    big = jnp.full((m,), jnp.inf, norms.dtype).at[range_id].min(norms)
+    lower = jnp.where(jnp.isfinite(big), big, 0.0)
+    del ones
+    return Partition(range_id.astype(jnp.int32), upper, lower, counts)
+
+
+def percentile_partition(norms: jax.Array, m: int) -> Partition:
+    """Algorithm 1: rank by 2-norm, sub-dataset j gets ranks in
+    ``[(j-1) n/m, j n/m)``. Ties broken by item index (stable argsort)."""
+    n = norms.shape[0]
+    order = jnp.argsort(norms, stable=True)          # ascending norms
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    # floor(rank * m / n) in [0, m) — equal-size slabs up to remainder.
+    # int32 is safe while n * m < 2^31 (2M items x 256 ranges = 5.4e8).
+    assert n * m < 2 ** 31, "partition arithmetic would overflow int32"
+    range_id = jnp.minimum((ranks * m) // n, m - 1)
+    return _range_stats(norms, range_id.astype(jnp.int32), m)
+
+
+def uniform_partition(norms: jax.Array, m: int) -> Partition:
+    """Fig 3a variant: m uniformly-spaced bins over [min norm, max norm]."""
+    lo = jnp.min(norms)
+    hi = jnp.max(norms)
+    width = jnp.maximum(hi - lo, 1e-12)
+    range_id = jnp.clip(((norms - lo) / width * m).astype(jnp.int32), 0, m - 1)
+    return _range_stats(norms, range_id, m)
+
+
+def single_partition(norms: jax.Array) -> Partition:
+    """Degenerate m=1 partition — makes SIMPLE-LSH a special case of
+    RANGE-LSH (used for A/B tests and the m-sweep benchmark)."""
+    return percentile_partition(norms, 1)
+
+
+def effective_upper(part: Partition) -> jax.Array:
+    """``U_j`` with empty ranges mapped to the global max (harmless: no item
+    uses them) so downstream math never divides by zero."""
+    U = jnp.max(part.upper)
+    return jnp.where(part.counts > 0, part.upper, U)
+
+
+def partition_by_scheme(norms: jax.Array, m: int, scheme: str) -> Partition:
+    if scheme == "percentile":
+        return percentile_partition(norms, m)
+    if scheme == "uniform":
+        return uniform_partition(norms, m)
+    raise ValueError(f"unknown partition scheme: {scheme!r}")

@@ -1,0 +1,123 @@
+"""Query-time exponent (rho) theory for hashing-based MIPS.
+
+The LSH query time complexity is ``O(n^rho log n)`` with
+``rho = log p1 / log p2`` (Definition 1). This module implements:
+
+* eq. (9)  — SIMPLE-LSH: ``rho = G(c, S0)``,
+* eq. (7)  — L2-ALSH ``rho`` with parameters (m, U, r) and its grid search,
+* eq. (13) — norm-ranged L2-ALSH ``rho_j`` for a sub-dataset with
+             norms in ``(u_{j-1}, u_j]``,
+* Theorem 1 helpers: per-range ``rho_j = G(c, S0/U_j)`` and the
+  ``alpha``/``beta`` feasibility conditions.
+
+Everything is vectorized JAX so benchmarks can sweep (c, S0) grids.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import l2_collision_prob, srp_collision_prob
+
+
+def rho_simple_lsh(c: jax.Array, S0: jax.Array) -> jax.Array:
+    """eq. (9): ``G(c, S0) = log(1 - acos(S0)/pi) / log(1 - acos(c S0)/pi)``.
+
+    ``S0`` is the (post-normalization) target inner product, ``0 < c < 1``.
+    """
+    p1 = srp_collision_prob(S0)
+    p2 = srp_collision_prob(c * S0)
+    return jnp.log(p1) / jnp.log(p2)
+
+
+def rho_ranged_simple_lsh(c: jax.Array, S0: jax.Array, U_j: jax.Array,
+                          ) -> jax.Array:
+    """Per-range exponent of RANGE-LSH: ``rho_j = G(c, S0 / U_j)`` (§3.2).
+
+    ``U_j`` is the local max 2-norm of sub-dataset ``S_j`` expressed in the
+    *global* normalization scale (i.e. ``U_j <= 1`` after dividing by U).
+    Larger effective inner product ``S0/U_j`` ⇒ smaller rho.
+    """
+    return rho_simple_lsh(c, jnp.minimum(S0 / U_j, 1.0))
+
+
+def rho_l2_alsh(S0: jax.Array, c: jax.Array, m: int, U: float, r: float
+                ) -> jax.Array:
+    """eq. (7): L2-ALSH exponent for parameters (m, U, r)."""
+    num_d = jnp.sqrt(1.0 + m / 4.0 - 2.0 * U * S0 + (U * S0) ** (2 ** (m + 1)))
+    den_d = jnp.sqrt(jnp.maximum(1.0 + m / 4.0 - 2.0 * c * U * S0, 1e-12))
+    p1 = l2_collision_prob(num_d, r)
+    p2 = l2_collision_prob(den_d, r)
+    return jnp.log(p1) / jnp.log(p2)
+
+
+def rho_ranged_l2_alsh(S0: jax.Array, c: jax.Array, m: int, U_j: float,
+                       r: float, u_lo: jax.Array, u_hi: jax.Array
+                       ) -> jax.Array:
+    """eq. (13): ranged L2-ALSH exponent for a sub-dataset with 2-norms in
+    ``(u_lo, u_hi]`` and scaling factor ``U_j`` (requires ``U_j * u_hi < 1``).
+
+    Versus eq. (7) the numerator's tail term uses ``(U_j u_hi)^{2^{m+1}}``
+    (<= the global bound) and the denominator gains ``(U_j u_lo)^{2^{m+1}} > 0``,
+    so ``rho_j < rho``.
+    """
+    num_d = jnp.sqrt(1.0 + m / 4.0 - 2.0 * U_j * S0
+                     + (U_j * u_hi) ** (2 ** (m + 1)))
+    den_d = jnp.sqrt(jnp.maximum(
+        1.0 + m / 4.0 - 2.0 * c * U_j * S0 + (U_j * u_lo) ** (2 ** (m + 1)),
+        1e-12))
+    p1 = l2_collision_prob(num_d, r)
+    p2 = l2_collision_prob(den_d, r)
+    return jnp.log(p1) / jnp.log(p2)
+
+
+class L2ALSHParams(NamedTuple):
+    m: int
+    U: float
+    r: float
+    rho: float
+
+
+#: The setting recommended by Shrivastava & Li (2014) and used in the paper's
+#: experiments (§4): m=3, U=0.83, r=2.5.
+RECOMMENDED_L2_ALSH = L2ALSHParams(m=3, U=0.83, r=2.5, rho=float("nan"))
+
+
+def grid_search_l2_alsh(S0: float, c: float,
+                        ms=(1, 2, 3, 4),
+                        Us=tuple(float(u) for u in jnp.linspace(0.5, 0.95, 10)),
+                        rs=tuple(float(r) for r in jnp.linspace(1.5, 4.5, 13)),
+                        ) -> L2ALSHParams:
+    """Grid search minimizing eq. (7) over (m, U, r), as the paper suggests."""
+    best = L2ALSHParams(3, 0.83, 2.5, float("inf"))
+    for m, U, r in itertools.product(ms, Us, rs):
+        rho = float(rho_l2_alsh(jnp.asarray(S0), jnp.asarray(c), m, U, r))
+        if jnp.isfinite(rho) and 0.0 < rho < best.rho:
+            best = L2ALSHParams(m, U, r, rho)
+    return best
+
+
+def theorem1_conditions(rho: float, rho_star: float, alpha: float, beta: float
+                        ) -> bool:
+    """Feasibility check of Theorem 1: ``0 < alpha < min(rho,
+    (rho - rho*)/(1 - rho*))`` and ``0 < beta < alpha * rho``."""
+    lim = min(rho, (rho - rho_star) / (1.0 - rho_star))
+    return (0.0 < alpha < lim) and (0.0 < beta < alpha * rho)
+
+
+def query_complexity_ratio(n: float, alpha: float, beta: float, rho: float,
+                           rho_star: float) -> float:
+    """Upper bound on ``f(n) / (n^rho log n)`` from eq. (11):
+
+    ``n^{alpha-rho}/log n + n^{alpha+(1-alpha) rho* - rho} + n^{beta - alpha rho}``.
+
+    → 0 as n → ∞ under the Theorem 1 conditions.
+    """
+    ln = jnp.log(n)
+    return float(n ** (alpha - rho) / ln
+                 + n ** (alpha + (1 - alpha) * rho_star - rho)
+                 + n ** (beta - alpha * rho))

@@ -1,0 +1,83 @@
+"""Alternating least squares matrix factorization in JAX.
+
+The paper obtains its Netflix / Yahoo!Music item and user embeddings from
+ALS-based matrix factorization (Yun et al., 2013) and serves MIPS over them
+(user embedding = query, item embedding = database). This module is that
+substrate: a batched, jit-compiled weighted-ALS solver that the recsys
+example and benchmarks use to generate genuine embedding geometry rather
+than raw Gaussians.
+
+Observed entries are weighted 1, unobserved 0 (classic weighted ALS):
+
+    U_i <- (V^T diag(w_i) V + lam I)^-1  V^T diag(w_i) r_i
+
+solved per row with a batched Cholesky via ``jax.vmap``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ALSState(NamedTuple):
+    users: jax.Array   # (n_users, rank)
+    items: jax.Array   # (n_items, rank)
+    loss: jax.Array    # () observed-entry MSE after the last sweep
+
+
+def _solve_side(fixed: jax.Array, ratings: jax.Array, weights: jax.Array,
+                lam: float) -> jax.Array:
+    """Solve for one side. fixed: (m, r); ratings/weights: (n, m) -> (n, r)."""
+    r = fixed.shape[1]
+    eye = lam * jnp.eye(r, dtype=fixed.dtype)
+
+    def one(row_r, row_w):
+        fw = fixed * row_w[:, None]                  # (m, r)
+        g = fw.T @ fixed + eye                       # (r, r)
+        rhs = fw.T @ row_r                           # (r,)
+        return jax.scipy.linalg.solve(g, rhs, assume_a="pos")
+
+    return jax.vmap(one)(ratings, weights)
+
+
+@jax.jit
+def _sweep(users, items, ratings, weights, lam):
+    users = _solve_side(items, ratings, weights, lam)
+    items = _solve_side(users, ratings.T, weights.T, lam)
+    pred = users @ items.T
+    se = jnp.sum(weights * jnp.square(ratings - pred))
+    loss = se / jnp.maximum(jnp.sum(weights), 1.0)
+    return users, items, loss
+
+
+def als_factorize(ratings: jax.Array, weights: jax.Array, rank: int,
+                  key: jax.Array, *, reg: float = 0.1, iters: int = 10
+                  ) -> ALSState:
+    """Factorize ``ratings`` (n_users, n_items) with observation ``weights``."""
+    ku, ki = jax.random.split(key)
+    n_u, n_i = ratings.shape
+    users = 0.1 * jax.random.normal(ku, (n_u, rank), ratings.dtype)
+    items = 0.1 * jax.random.normal(ki, (n_i, rank), ratings.dtype)
+    loss = jnp.asarray(jnp.inf, ratings.dtype)
+    for _ in range(iters):
+        users, items, loss = _sweep(users, items, ratings, weights,
+                                    jnp.asarray(reg, ratings.dtype))
+    return ALSState(users, items, loss)
+
+
+def synthetic_ratings(key: jax.Array, n_users: int, n_items: int,
+                      true_rank: int = 16, density: float = 0.05,
+                      noise: float = 0.1) -> Tuple[jax.Array, jax.Array]:
+    """Low-rank + noise rating matrix with a sparse observation mask."""
+    ku, ki, kn, km = jax.random.split(key, 4)
+    u = jax.random.normal(ku, (n_users, true_rank)) / jnp.sqrt(true_rank)
+    v = jax.random.normal(ki, (n_items, true_rank))
+    # skewed item popularity => long-ish tail in learned item norms
+    pop = jnp.exp(0.5 * jax.random.normal(kn, (n_items,)))
+    r = (u @ v.T) * pop[None, :]
+    r = r + noise * jax.random.normal(kn, r.shape)
+    w = jax.random.bernoulli(km, density, r.shape).astype(r.dtype)
+    return r * w, w

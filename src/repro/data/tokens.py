@@ -1,0 +1,77 @@
+"""Token data pipeline for the LM training/serving drivers.
+
+Deterministic synthetic corpus (no internet): a counter-based PRNG token
+stream, shard-aware so each data-parallel rank draws only its slice —
+the same global batch is produced for any (pod, data) mesh factorization,
+which is what makes elastic re-meshing reproducible (launch/runtime.py).
+
+Also hosts the ``ShapeDtypeStruct`` builders used by the multi-pod dry-run
+(inputs are never materialized there).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Batch(NamedTuple):
+    tokens: jax.Array   # (B, S) int32 — input ids
+    labels: jax.Array   # (B, S) int32 — next-token targets
+    mask: jax.Array     # (B, S) f32  — loss weights
+
+
+class SyntheticCorpus:
+    """Deterministic infinite token stream with a Zipf-ish unigram shape.
+
+    ``sample(step, rank, per_rank_batch)`` is a pure function of its
+    arguments — ranks never need to exchange data, and a restarted job
+    resumes the exact stream from the checkpointed step.
+    """
+
+    def __init__(self, vocab: int, seq_len: int, seed: int = 0):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def sample(self, step: int, rank: int, per_rank_batch: int) -> Batch:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, rank]))
+        # Zipf-like marginal: u^4 concentrates mass on low ids
+        u = rng.random((per_rank_batch, self.seq_len + 1))
+        toks = np.minimum((u ** 4 * self.vocab).astype(np.int32),
+                          self.vocab - 1)
+        tokens = jnp.asarray(toks[:, :-1])
+        labels = jnp.asarray(toks[:, 1:])
+        mask = jnp.ones(tokens.shape, jnp.float32)
+        return Batch(tokens, labels, mask)
+
+    def batches(self, rank: int, per_rank_batch: int,
+                start_step: int = 0) -> Iterator[Batch]:
+        step = start_step
+        while True:
+            yield self.sample(step, rank, per_rank_batch)
+            step += 1
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(global_batch: int, seq_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.float32),
+    }
+
+
+def decode_batch_specs(global_batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+    }

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: batched packed-Hamming scan (the serving hot loop).
+
+Query processing in the TPU-native RANGE-LSH is a dense scan: XOR the query
+code against every item code and popcount (DESIGN.md §3). For Q queries, N
+items and W uint32 words per code, this is a (Q, N, W) VPU workload with
+int32 accumulation — memory-bound on the item codes, so the kernel tiles the
+item axis to stream codes through VMEM once per query block.
+
+  * grid = (Q/BQ, N/BN); each step loads q (BQ, W) and db (BN, W) into VMEM
+    and writes a (BQ, BN) int32 distance tile.
+  * ``lax.population_count`` runs on the VPU; the XOR broadcast is
+    (BQ, BN, W) in VMEM (BQ=64, BN=512, W<=8 -> <=1 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, db_ref, out_ref):
+    q = q_ref[...]                     # (BQ, W) uint32
+    db = db_ref[...]                   # (BN, W) uint32
+    x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+    pop = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = jnp.sum(pop, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def hamming_pallas(q_codes: jax.Array, db_codes: jax.Array, *,
+                   bq: int = 64, bn: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """All-pairs Hamming distance on packed codes.
+
+    Args:
+      q_codes:  (Q, W) uint32, Q % bq == 0.
+      db_codes: (N, W) uint32, N % bn == 0.
+
+    Returns: (Q, N) int32.
+    """
+    Q, W = q_codes.shape
+    N, W2 = db_codes.shape
+    assert W == W2 and Q % bq == 0 and N % bn == 0
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(q_codes, db_codes)

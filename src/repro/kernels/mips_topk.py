@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: blocked exact-MIPS with streaming top-k.
+
+The re-rank stage of the query pipeline (and the exact-MIPS baseline) scores
+a query block against the full item matrix and keeps a running top-k. A
+naive matmul materializes (Q, N) scores in HBM; for N in the millions that
+is the dominant byte cost. This kernel streams item blocks through VMEM and
+maintains the running (vals, ids) top-k buffer in the *output* blocks, which
+map to the same (0, j)-block for every item step — the TPU "output
+revisiting" pattern keeps them resident in VMEM across the whole item loop.
+
+  * grid = (N/BN, Q/BQ) with the item axis OUTER-most-minor (sequential on
+    TPU) so each query block finishes its full item sweep before moving on.
+  * block-local top-k is K rounds of (max, mask) on the (BQ, BN) score tile —
+    K is static and small (<=64), avoiding lax.top_k inside the kernel
+    (unsupported lowering on TPU Pallas).
+  * merge = same iterative max over the concatenated (BQ, K + BN) tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _iter_topk(scores: jax.Array, ids: jax.Array, k: int):
+    """K rounds of argmax+mask over the last axis. scores (BQ, M)."""
+    vals_out = []
+    ids_out = []
+    s = scores
+    for _ in range(k):
+        pos = jnp.argmax(s, axis=-1)                      # (BQ,)
+        row = jnp.arange(s.shape[0])
+        vals_out.append(s[row, pos])
+        ids_out.append(ids[row, pos])
+        s = s.at[row, pos].set(NEG)
+    return jnp.stack(vals_out, axis=-1), jnp.stack(ids_out, axis=-1)
+
+
+def _topk_kernel(q_ref, it_ref, vals_ref, ids_ref, *, k: int, bn: int,
+                 n_blocks: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG)
+        ids_ref[...] = jnp.zeros_like(ids_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # (BQ, d)
+    it = it_ref[...].astype(jnp.float32)                  # (BN, d)
+    scores = jax.lax.dot_general(
+        q, it, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (BQ, BN)
+    blk_ids = (nb * bn + jnp.arange(bn, dtype=jnp.int32))[None, :]
+    blk_ids = jnp.broadcast_to(blk_ids, scores.shape)
+
+    all_vals = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    all_ids = jnp.concatenate([ids_ref[...], blk_ids], axis=-1)
+    vals, ids = _iter_topk(all_vals, all_ids, k)
+    vals_ref[...] = vals
+    ids_ref[...] = ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def mips_topk_pallas(queries: jax.Array, items: jax.Array, k: int, *,
+                     bq: int = 8, bn: int = 256,
+                     interpret: bool = False):
+    """Exact top-k MIPS: (Q, d) x (N, d) -> vals (Q, k) f32, ids (Q, k) i32.
+
+    Pre-padded shapes required: Q % bq == 0, N % bn == 0; k <= bn.
+    """
+    Q, d = queries.shape
+    N, d2 = items.shape
+    assert d == d2 and Q % bq == 0 and N % bn == 0 and k <= bn
+    n_blocks = N // bn
+    grid = (Q // bq, n_blocks)          # item axis minor => sequential sweep
+    vals, ids = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, bn=bn, n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, items)
+    return vals, ids

@@ -1,0 +1,123 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op pads inputs to kernel block multiples, dispatches to the Pallas
+kernel on TPU (interpret mode when testing on CPU) or to the pure-jnp oracle
+otherwise, and slices padding off the result. ``impl`` selects:
+
+  * "auto"      — Pallas compiled on TPU, jnp reference elsewhere (default;
+                  the reference XLA path is the fast path on CPU).
+  * "pallas"    — force Pallas (compiled on TPU, interpret on CPU — slow,
+                  used by the kernel test-suite).
+  * "ref"       — force the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.hamming import hamming_pallas
+from repro.kernels.hash_encode import hash_encode_pallas
+from repro.kernels.mips_topk import mips_topk_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def hash_encode(x: jax.Array, A: jax.Array,
+                tail: Optional[jax.Array] = None,
+                a_tail: Optional[jax.Array] = None, *,
+                impl: str = "auto") -> jax.Array:
+    """Fused sign-projection encode to packed uint32 codes.
+
+    x: (N, d); A: (d, L); optional SIMPLE-LSH fold: tail (N,), a_tail (L,).
+    Returns (N, ceil(L/32)) uint32.
+    """
+    impl = _resolve(impl)
+    N, d = x.shape
+    L = A.shape[1]
+    if tail is None:
+        tail = jnp.zeros((N,), x.dtype)
+        a_tail = jnp.zeros((L,), x.dtype)
+    if impl == "ref":
+        return _ref.hash_encode_ref(x, A, tail, a_tail)
+
+    bn, bl, bd = 128, 128, min(512, max(128, d))
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    Ap = _pad_to(_pad_to(A, 0, bd), 1, bl)
+    tp = _pad_to(tail[:, None], 0, bn)
+    ap = _pad_to(a_tail[None, :], 1, bl)
+    out = hash_encode_pallas(xp, Ap, tp, ap, bn=bn, bl=bl, bd=bd,
+                             interpret=not _on_tpu())
+    W = (L + 31) // 32
+    out = out[:N, :W]
+    # zero the padding bits of the last word (padded columns project to 0,
+    # and sign(0) = 1 would otherwise pollute Hamming distances).
+    rem = L % 32
+    if rem:
+        mask = jnp.uint32((1 << rem) - 1)
+        out = out.at[:, -1].set(out[:, -1] & mask)
+    return out
+
+
+def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
+                 impl: str = "auto") -> jax.Array:
+    """All-pairs Hamming distances (Q, W) x (N, W) -> (Q, N) int32."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.hamming_ref(q_codes, db_codes)
+    bq, bn = 64, 512
+    Q, N = q_codes.shape[0], db_codes.shape[0]
+    qp = _pad_to(q_codes, 0, bq)
+    dp = _pad_to(db_codes, 0, bn)
+    out = hamming_pallas(qp, dp, bq=bq, bn=bn, interpret=not _on_tpu())
+    return out[:Q, :N]
+
+
+def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
+              impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k inner products: vals (Q, k) f32, ids (Q, k) int32."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.mips_topk_ref(queries, items, k)
+    bq, bn = 8, 256
+    Q, N = queries.shape[0], items.shape[0]
+    assert k <= N, "k must not exceed the item count"
+    # Padded item rows must rank strictly last even against negative scores:
+    # append a sentinel feature column — 1.0 on queries, 0.0 on real items,
+    # -1e30 on padded items — so padded scores are real_dot - 1e30.
+    qp = _pad_to(queries, 0, bq)
+    qp = jnp.concatenate([qp, jnp.ones((qp.shape[0], 1), qp.dtype)], axis=1)
+    sentinel = jnp.zeros((N, 1), items.dtype)
+    ip = jnp.concatenate([items, sentinel], axis=1)
+    ip = _pad_to(ip, 0, bn, value=0)
+    pad_rows = ip.shape[0] - N
+    if pad_rows:
+        ip = ip.at[N:, -1].set(-1e30)
+    vals, ids = mips_topk_pallas(qp, ip, k, bq=bq, bn=bn,
+                                 interpret=not _on_tpu())
+    vals, ids = vals[:Q], ids[:Q]
+    # strip the sentinel's -1e30 contribution if a padded row sneaked in
+    # (only possible when k > N, which is disallowed).
+    return vals, ids

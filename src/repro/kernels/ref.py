@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: each kernel test sweeps shapes/dtypes
+and asserts the Pallas output (interpret mode on CPU, compiled on TPU)
+matches these functions exactly (integer outputs) or to fp tolerance.
+
+They are also the production fallback on non-TPU backends — XLA compiles
+them well on CPU/GPU, while the Pallas versions are TPU-tiled.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import pack_bits
+
+
+def hash_encode_ref(x: jax.Array, A: jax.Array,
+                    tail: Optional[jax.Array] = None,
+                    a_tail: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the fused encode kernel.
+
+    ``x``: (N, d) items (already divided by their range's U_j),
+    ``A``: (d, L) projections. If ``tail`` (N,) and ``a_tail`` (L,) are given,
+    the SIMPLE-LSH augmentation ``tail * a_tail`` is added to the projection
+    (eq. 8 folded, DESIGN.md §3). Returns packed (N, ceil(L/32)) uint32.
+    """
+    proj = x.astype(jnp.float32) @ A.astype(jnp.float32)
+    if tail is not None:
+        proj = proj + tail.astype(jnp.float32)[:, None] * a_tail[None, :]
+    return pack_bits((proj >= 0.0).astype(jnp.uint8))
+
+
+def hamming_ref(q_codes: jax.Array, db_codes: jax.Array) -> jax.Array:
+    """Oracle for the Hamming-scan kernel: (Q, W) x (N, W) -> (Q, N) int32."""
+    x = jnp.bitwise_xor(q_codes[:, None, :], db_codes[None, :, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def mips_topk_ref(queries: jax.Array, items: jax.Array, k: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the streaming top-k kernel: exact matmul + lax.top_k."""
+    scores = queries.astype(jnp.float32) @ items.astype(jnp.float32).T
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids.astype(jnp.int32)

@@ -1,0 +1,166 @@
+"""Serving launcher: prefill / decode steps with explicit shardings.
+
+``make_decode_step`` jits one-token decoding with:
+  * weights TP-sharded (+ FSDP axis for >20B models),
+  * decode caches sequence-sharded on ``model`` (flash-decoding combine —
+    parallel/sharding.py),
+  * optional LSH-decode head: RANGE-LSH over the unembedding
+    (models/lm_head.py) returning approximate top-k tokens instead of the
+    full (B, V) logits — the paper's technique in the serving path.
+
+``BatchedServer`` is a toy request loop for the examples: accumulates
+requests into a batch, prefications, then greedy-decodes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import lm, lm_head
+from repro.parallel import sharding as shd
+
+FSDP_SERVE_THRESHOLD = 2e10  # params above this serve with FSDP+TP
+MODEL_AXIS = "model"
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def serve_fsdp_axis(params) -> Optional[str]:
+    return "data" if param_count(params) > FSDP_SERVE_THRESHOLD else None
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
+                     fsdp_axis: Optional[str] = None,
+                     lsh_decode: bool = False, topk: int = 8,
+                     num_probe: int = 1024,
+                     vocab_meta: Optional[Tuple[int, int, float]] = None
+                     ) -> Callable:
+    """Returns jitted ``fn(params, tokens, caches, pos[, vidx_arrays])``.
+
+    With ``lsh_decode`` the output is (vals (B, k), ids (B, k)) — the
+    RANGE-LSH head needs ``vocab_meta=(code_len, hash_bits, eps)`` (static)
+    and ``vidx_arrays`` = dict(codes, range_id, upper, A) (vocab-sharded).
+    Otherwise full (B, V) logits. Cache in/out shardings pin the
+    sequence-sharded layout so XLA's partial softmax (flash-decoding)
+    kicks in.
+    """
+    dp = shd.dp_axes(mesh)
+
+    def step(params, tokens, caches, cache_pos, vidx_arrays=None):
+        mode = "none" if lsh_decode else "full"
+        out, new_caches = lm.decode_step(params, tokens, caches, cache_pos,
+                                         cfg, logits_mode=mode)
+        if lsh_decode:
+            unembed = (params["embed"].T if cfg.tie_embeddings
+                       else params["unembed"])
+            index = lm_head.VocabIndex(
+                vidx_arrays["codes"], vidx_arrays["range_id"],
+                vidx_arrays["upper"], vidx_arrays["A"],
+                vocab_meta[0], vocab_meta[1], vocab_meta[2])
+            vals, ids = lm_head.lsh_topk_tokens(
+                index, out, unembed, k=topk, num_probe=num_probe,
+                final_softcap=cfg.final_softcap)
+            return (vals, ids), new_caches
+        return out, new_caches
+
+    abstract_params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    # stationary weights for serving unless the caller forces an FSDP axis
+    # (§Perf hillclimb B)
+    pspecs = shd.param_specs(abstract_params, cfg, fsdp_axis=fsdp_axis,
+                             serve_stationary=fsdp_axis is None)
+    cspecs = shd.cache_specs(cfg, mesh)
+    in_shardings = [shd.to_shardings(mesh, pspecs),
+                    NamedSharding(mesh, P(dp)),
+                    shd.to_shardings(mesh, cspecs),
+                    NamedSharding(mesh, P())]
+    if lsh_decode:
+        in_shardings.append(shd.to_shardings(mesh, {
+            "codes": P(MODEL_AXIS, None), "range_id": P(MODEL_AXIS),
+            "upper": P(), "A": P(None, None)}))
+    out_shardings = (None, shd.to_shardings(mesh, cspecs))
+    return jax.jit(step, in_shardings=tuple(in_shardings),
+                   out_shardings=out_shardings,
+                   donate_argnums=(2,))
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, *,
+                 fsdp_axis: Optional[str] = None) -> Callable:
+    dp = shd.dp_axes(mesh)
+    abstract_params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(abstract_params, cfg, fsdp_axis=fsdp_axis)
+
+    def fn(params, tokens, patches=None):
+        return lm.prefill(params, tokens, cfg, patches)
+
+    return jax.jit(fn, in_shardings=(
+        shd.to_shardings(mesh, pspecs),
+        NamedSharding(mesh, P(dp, None))))
+
+
+class BatchedServer:
+    """Minimal batched greedy-decode loop over the jitted steps."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh: Mesh, *,
+                 max_seq: int = 256, batch: int = 8,
+                 lsh_decode: bool = False,
+                 vocab_index: Optional[Any] = None,
+                 num_probe: int = 1024):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.max_seq = max_seq
+        self.batch = batch
+        self.lsh_decode = lsh_decode
+        self.vocab_index = vocab_index
+        self.num_probe = num_probe
+        meta = ((vocab_index.code_len, vocab_index.hash_bits,
+                 vocab_index.eps) if lsh_decode else None)
+        self._vidx_arrays = (dict(codes=vocab_index.codes,
+                                  range_id=vocab_index.range_id,
+                                  upper=vocab_index.upper,
+                                  A=vocab_index.A) if lsh_decode else None)
+        self.decode_fn = make_decode_step(cfg, mesh, lsh_decode=lsh_decode,
+                                          vocab_meta=meta,
+                                          num_probe=num_probe)
+
+    def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
+        """prompts: (B, S0) int32 -> generated ids (B, steps)."""
+        B, S0 = prompts.shape
+        last_hidden, pf_caches = lm.prefill(self.params, prompts, self.cfg)
+        caches = lm.extend_cache(self.cfg, pf_caches, self.max_seq)
+        # first generated token comes from the prefill's last hidden state
+        unembed = (self.params["embed"].T if self.cfg.tie_embeddings
+                   else self.params["unembed"])
+        if self.lsh_decode:
+            _, ids = lm_head.lsh_topk_tokens(
+                self.vocab_index, last_hidden, unembed, k=1,
+                num_probe=self.num_probe,
+                final_softcap=self.cfg.final_softcap)
+            tok = ids[:, 0]
+        else:
+            _, ids = lm_head.exact_topk_tokens(
+                last_hidden, unembed, 1, self.cfg.final_softcap)
+            tok = ids[:, 0]
+        out = [tok]
+        for t in range(steps - 1):
+            pos = jnp.asarray(S0 + t, jnp.int32)
+            args = (self.params, tok, caches, pos)
+            if self.lsh_decode:
+                (vals, ids), caches = self.decode_fn(*args,
+                                                     self._vidx_arrays)
+                tok = ids[:, 0]
+            else:
+                logits, caches = self.decode_fn(*args)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

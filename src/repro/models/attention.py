@@ -1,0 +1,469 @@
+"""Attention: GQA + variants (qk_norm, bias, softcap, local window, MLA).
+
+Three execution modes:
+
+* ``flash_attention`` — train/prefill: two-level ``lax.scan`` over query and
+  key/value chunks with online softmax (O(S * chunk) memory, never the full
+  (S, S) matrix). Causal and sliding-window masks are applied per block.
+  Known trade-off: fully-masked kv blocks are still computed (≈2x causal
+  FLOP waste) — a Pallas flash kernel with block skipping is the planned
+  hillclimb for compute-bound cells (EXPERIMENTS.md §Perf).
+* ``decode_attention`` — one new token vs a (B, S_max, KV, hd) cache.
+* ``decode_attention_seq_sharded`` — long-context decode with the cache
+  sharded along the sequence axis: each shard computes a partial softmax
+  (o_i, m_i, l_i) and the exact result is combined with two psums
+  (flash-decoding on the ``data`` mesh axis; used by jamba long_500k).
+
+MLA (MiniCPM3/DeepSeek-style latent attention) caches the compressed
+``c_kv`` + shared ``k_rope`` only; decode uses the absorbed form (scores via
+``q W_uk^T c_kv``) so the full K/V are never materialized at decode time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (PARAM_DTYPE, apply_rope, dense_init,
+                                 rms_norm, softcap)
+
+NEG_INF = -1e30
+
+#: §Perf hillclimb A (EXPERIMENTS.md): when True, causal self-attention
+#: only computes kv blocks at or below the diagonal (and inside the local
+#: window when one is set) — a Python loop over query chunks with a
+#: per-chunk kv prefix replaces the fixed-length inner scan. The analytic
+#: flop estimator (parallel/analytic.py) reads this flag so the roofline
+#: stays implementation-true. REPRO_CAUSAL_SKIP=0 restores the
+#: paper-faithful baseline for A/B rooflining.
+import os as _os
+
+CAUSAL_BLOCK_SKIP = _os.environ.get("REPRO_CAUSAL_SKIP", "1") == "1"
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """One attention layer's params (GQA or MLA per cfg)."""
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 8)
+        p = {
+            "w_dq": dense_init(ks[0], (cfg.d_model, m.q_rank)),
+            "q_norm": jnp.zeros((m.q_rank,), jnp.float32),
+            "w_uq": dense_init(ks[1], (m.q_rank,
+                                       cfg.n_heads * (m.nope_dim + m.rope_dim))),
+            "w_dkv": dense_init(ks[2], (cfg.d_model, m.kv_rank)),
+            "kv_norm": jnp.zeros((m.kv_rank,), jnp.float32),
+            "w_kr": dense_init(ks[3], (cfg.d_model, m.rope_dim)),
+            "w_uk": dense_init(ks[4], (m.kv_rank, cfg.n_heads * m.nope_dim)),
+            "w_uv": dense_init(ks[5], (m.kv_rank, cfg.n_heads * m.v_dim)),
+            "w_o": dense_init(ks[6], (cfg.n_heads * m.v_dim, cfg.d_model)),
+        }
+        return p
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd)),
+        "w_k": dense_init(ks[1], (cfg.d_model, cfg.n_kv * hd)),
+        "w_v": dense_init(ks[2], (cfg.d_model, cfg.n_kv * hd)),
+        "w_o": dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.n_heads * hd,), PARAM_DTYPE)
+        p["b_k"] = jnp.zeros((cfg.n_kv * hd,), PARAM_DTYPE)
+        p["b_v"] = jnp.zeros((cfg.n_kv * hd,), PARAM_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# flash core (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(S: int, want: int) -> int:
+    """Largest divisor of S that is <= want (seq lengths like 1500 or
+    4096+256 patches aren't powers of two)."""
+    want = min(want, S)
+    for c in range(want, 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                window: Optional[int]) -> jax.Array:
+    """(Cq, Ck) boolean keep-mask from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    keep = jnp.ones(d.shape, bool)
+    if causal:
+        keep &= d >= 0
+    if window is not None:
+        keep &= d < window
+    return keep
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, k_pos: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    logit_cap: Optional[float] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions for masking.
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0, f"n_heads={H} must be a multiple of n_kv={KV}"
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def run_q_chunk(qi, qpi, kcs, vcs, kps):
+        """Online-softmax sweep of one query chunk over given kv chunks."""
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            ki, vi, kpi = kv_in            # (B, KV, Ck, hd), ..., (Ck,)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            if logit_cap is not None:
+                s = softcap(s, logit_cap)
+            keep = _block_mask(qpi, kpi, causal, window)
+            s = jnp.where(keep[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        shape = (B, KV, G, q_chunk)
+        init = (jnp.full(shape, NEG_INF, jnp.float32),
+                jnp.zeros(shape, jnp.float32),
+                jnp.zeros(shape + (hd,), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kcs, vcs, kps))
+        return acc / jnp.maximum(l, 1e-30)[..., None]   # (B, KV, G, Cq, hd)
+
+    aligned = (causal and Sq == Sk and q_chunk == kv_chunk
+               and bool(jnp.size(q_pos) == jnp.size(k_pos)))
+    if CAUSAL_BLOCK_SKIP and aligned:
+        # §Perf hillclimb A: chunk i only sweeps kv chunks
+        # [lo_i, i] where lo_i trims blocks fully outside the local window.
+        outs = []
+        for i in range(nq):
+            lo = 0
+            if window is not None:
+                lo = max(0, (i * q_chunk - window) // kv_chunk)
+            outs.append(run_q_chunk(qc[i], qp[i], kc[lo:i + 1],
+                                    vc[lo:i + 1], kp[lo:i + 1]))
+        o = jnp.stack(outs, axis=0)
+    else:
+        def q_step(_, q_in):
+            qi, qpi = q_in
+            return None, run_q_chunk(qi, qpi, kc, vc, kp)
+
+        _, o = jax.lax.scan(q_step, None, (qc, qp))
+    # o: (nq, B, KV, G, Cq, hd) -> (B, nq, Cq, KV, G, hd) -> (B, Sq, H, hd)
+    o = o.transpose(1, 0, 4, 2, 3, 5)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# NOTE: the transpose bookkeeping above is pinned down by
+# tests/test_models.py::test_flash_matches_naive which checks this function
+# against plain softmax attention for causal/local/capped variants.
+
+
+def naive_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                    logit_cap=None, scale=None):
+    """Reference O(S^2)-memory attention (tests + tiny smoke configs)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        s = softcap(s, logit_cap)
+    keep = _block_mask(q_pos, k_pos, causal, window)
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_pos: jax.Array, *, window: Optional[int] = None,
+                     logit_cap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, KV, hd); cache_pos: () current length.
+
+    Attends to positions [max(0, cache_pos-window), cache_pos]."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        s = softcap(s, logit_cap)
+    pos = jnp.arange(S)
+    keep = pos[None, :] <= cache_pos
+    if window is not None:
+        keep &= pos[None, :] > cache_pos - window
+    s = jnp.where(keep[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def decode_attention_seq_sharded(q: jax.Array, k_cache: jax.Array,
+                                 v_cache: jax.Array, cache_pos: jax.Array,
+                                 axis: str, *, scale: Optional[float] = None
+                                 ) -> jax.Array:
+    """Flash-decoding combine across a sequence-sharded cache.
+
+    Runs INSIDE shard_map: k_cache/v_cache are the local (B, S_loc, KV, hd)
+    shards; ``jax.lax.axis_index(axis)`` gives the shard's position so
+    global causal masking stays exact. Two psums (max + sum) produce the
+    exact softmax — O(B*H*hd) interconnect bytes instead of O(S).
+    """
+    B, H, hd = q.shape
+    S_loc, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    shard = jax.lax.axis_index(axis)
+    offset = shard * S_loc
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = offset + jnp.arange(S_loc)
+    s = jnp.where((pos <= cache_pos)[None, None, None], s, NEG_INF)
+    m_loc = jnp.max(s, axis=-1)                         # (B, KV, G)
+    m_glob = jax.lax.pmax(m_loc, axis)
+    p = jnp.exp(s - m_glob[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    l_glob = jax.lax.psum(l_loc, axis)
+    o_glob = jax.lax.psum(o_loc, axis)
+    o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer: projections + rope + cache plumbing
+# ---------------------------------------------------------------------------
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array          # (B, S, KV, hd)  [MLA: (B, S, kv_rank)]
+    v: jax.Array          # (B, S, KV, hd)  [MLA: (B, S, rope_dim) k_rope]
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("...d,dh->...h", x, p["w_q"])
+    k = jnp.einsum("...d,dh->...h", x, p["w_k"])
+    v = jnp.einsum("...d,dh->...h", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(q.shape[:-1] + (cfg.n_heads, hd))
+    k = k.reshape(k.shape[:-1] + (cfg.n_kv, hd))
+    v = v.reshape(v.shape[:-1] + (cfg.n_kv, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_forward(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *,
+                layer_is_local: bool, causal: bool = True,
+                use_rope: bool = True,
+                kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                kv_positions: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, AttnCache]:
+    """Full-sequence attention (train/prefill). x: (B, S, d).
+
+    Returns (output (B, S, d), cache of the projected K/V for decode reuse).
+    ``kv_override`` supplies external K/V (whisper cross-attention).
+    """
+    q, k, v = _project_qkv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+        k_pos = kv_positions
+    else:
+        k_pos = positions
+    window = cfg.local_window if layer_is_local else None
+    o = flash_attention(q, k, v, positions, k_pos, causal=causal,
+                        window=window, logit_cap=cfg.attn_softcap)
+    out = jnp.einsum("bshd,hdD->bsD",
+                     o.reshape(o.shape[:2] + (cfg.n_heads,
+                                              cfg.resolved_head_dim)),
+                     p["w_o"].reshape(cfg.n_heads, cfg.resolved_head_dim,
+                                      cfg.d_model))
+    return out, AttnCache(k, v)
+
+
+def gqa_decode(p, x: jax.Array, cache: AttnCache, cache_pos: jax.Array,
+               cfg: ModelConfig, *, layer_is_local: bool,
+               seq_axis: Optional[str] = None,
+               ) -> Tuple[jax.Array, AttnCache]:
+    """One-token decode. x: (B, d); cache holds S_max slots; cache_pos is
+    the index being written. ``seq_axis`` switches to the sequence-sharded
+    combine (cache pre-sharded along that mesh axis inside shard_map)."""
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x[:, None, :], cfg)
+    pos = cache_pos[None] if cache_pos.ndim == 0 else cache_pos
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = q[:, 0]                                    # (B, H, hd)
+    if seq_axis is None:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        window = cfg.local_window if layer_is_local else None
+        o = decode_attention(q, k_cache, v_cache, cache_pos, window=window,
+                             logit_cap=cfg.attn_softcap)
+    else:
+        # sequence-sharded: write lands on the owning shard only
+        S_loc = cache.k.shape[1]
+        shard = jax.lax.axis_index(seq_axis)
+        local_pos = cache_pos - shard * S_loc
+        owns = (local_pos >= 0) & (local_pos < S_loc)
+        safe_pos = jnp.clip(local_pos, 0, S_loc - 1)
+        k_new = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), safe_pos, axis=1)
+        v_new = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), safe_pos, axis=1)
+        k_cache = jnp.where(owns, k_new, cache.k)
+        v_cache = jnp.where(owns, v_new, cache.v)
+        o = decode_attention_seq_sharded(q, k_cache, v_cache, cache_pos,
+                                         seq_axis)
+    out = jnp.einsum("bhd,hdD->bD",
+                     o.reshape(o.shape[0], cfg.n_heads, hd),
+                     p["w_o"].reshape(cfg.n_heads, hd, cfg.d_model))
+    return out, AttnCache(k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_forward(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, AttnCache]:
+    """Prefill/train MLA: expand K/V from the latent per kv chunk."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p["w_uq"]).reshape(
+        B, S, H, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])     # shared head
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, p["w_uk"]).reshape(
+        B, S, H, m.nope_dim)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, p["w_uv"]).reshape(B, S, H, m.v_dim)
+    # fold the shared rope key into per-head keys; pad v to qk width for the
+    # shared flash core, then slice (v_dim <= nope+rope always holds here).
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.rope_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qk_dim = m.nope_dim + m.rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_dim)))
+    o = flash_attention(q_full, k_full, v_pad, positions, positions,
+                        causal=True, scale=qk_dim ** -0.5)
+    o = o[..., :m.v_dim]
+    out = jnp.einsum("bshv,hvD->bsD",
+                     o, p["w_o"].reshape(H, m.v_dim, cfg.d_model))
+    return out, AttnCache(c_kv, k_rope)
+
+
+def mla_decode(p, x: jax.Array, cache: AttnCache, cache_pos: jax.Array,
+               cfg: ModelConfig) -> Tuple[jax.Array, AttnCache]:
+    """Absorbed-form MLA decode: never materializes per-head K/V.
+
+    cache.k = c_kv (B, S, kv_rank); cache.v = k_rope (B, S, rope_dim).
+    """
+    m = cfg.mla
+    B, _ = x.shape
+    H = cfg.n_heads
+    cq = jnp.einsum("bd,dr->br", x, p["w_dq"])
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("br,rh->bh", cq, p["w_uq"]).reshape(
+        B, H, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    pos = cache_pos[None]
+    q_rope = apply_rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
+
+    c_new = jnp.einsum("bd,dr->br", x, p["w_dkv"])
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = jnp.einsum("bd,dr->br", x, p["w_kr"])
+    kr_new = apply_rope(kr_new[:, None, None], pos, cfg.rope_theta)[:, 0, 0]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, c_new[:, None].astype(cache.k.dtype), cache_pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, kr_new[:, None].astype(cache.v.dtype), cache_pos, axis=1)
+
+    # absorbed scores: q_nope W_uk^T c_kv  +  q_rope k_rope
+    w_uk = p["w_uk"].reshape(m.kv_rank, H, m.nope_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))          # (B, H, kv_rank)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+         + jnp.einsum("bhn,bsn->bhs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    qk_dim = m.nope_dim + m.rope_dim
+    s = s * qk_dim ** -0.5
+    S = c_kv.shape[1]
+    keep = jnp.arange(S)[None, :] <= cache_pos
+    s = jnp.where(keep[:, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pattn, c_kv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_rank, H, m.v_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bhv,hvD->bD", o.astype(x.dtype),
+                     p["w_o"].reshape(H, m.v_dim, cfg.d_model))
+    return out, AttnCache(c_kv, k_rope)

@@ -1,0 +1,84 @@
+"""Shared model building blocks: norms, RoPE, init, dtype policy.
+
+Parameters are plain nested dicts of jax.Arrays (bf16 by default, fp32 norm
+scales). Initializers take an explicit key and are pure, so the whole model
+init can run under ``jax.eval_shape`` for the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...],
+               dtype=PARAM_DTYPE, scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=PARAM_DTYPE) -> jax.Array:
+    # std d^-0.5 keeps tied unembedding logits O(1) (gemma-style input
+    # scaling by sqrt(d) restores residual-stream magnitude where used).
+    return (d ** -0.5 * jax.random.normal(
+        key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32, output back in input dtype."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: ``cap * tanh(x / cap)``."""
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """Rotary position embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: ``(silu(x W_g) * (x W_u)) W_d``."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """Mean next-token CE over masked positions; logits fp32-softmaxed."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,495 @@
+"""Generic decoder-only LM assembled from a ModelConfig.
+
+Layer heterogeneity (jamba's 1:7 attn:mamba interleave, gemma2's
+local/global alternation, xLSTM's 7:1 mLSTM:sLSTM, MoE-every-k) is handled
+with a *period-pattern stack*: the layer pattern repeats with period P, so
+params/caches for position ``i`` in the period are stacked over the
+``n_layers / P`` repetitions and the forward pass is a single
+``lax.scan`` over repetitions whose body applies positions 0..P-1. The HLO
+contains each distinct layer body exactly once — compile time and program
+size stay flat for the 72-layer dry-run.
+
+Memory-critical details:
+  * the (B, S, V) logit tensor is never materialized: training loss runs a
+    rematerialized ``lax.scan`` over sequence chunks (logits recomputed in
+    the backward pass) — with 256k vocabs this is the difference between
+    fitting and a ~100x activation blow-up;
+  * attention decode caches are sequence-sharded on the ``model`` mesh axis
+    (flash-decoding combine; attention.py) — one (B,H,hd)-sized psum per
+    layer instead of a KV all-gather;
+  * recurrent (mamba/xlstm) state is O(1) in sequence — those archs take
+    the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (PARAM_DTYPE, cross_entropy_loss, dense_init,
+                                 embed_init, rms_norm, softcap, swiglu)
+
+PyTree = Any
+
+#: decode-MoE token groups. REFUTED hillclimb (EXPERIMENTS.md §Perf B.2):
+#: grouping decode tokens by data shard (16) raised wire bytes 421->561 MB
+#: on llama4 — the per-group capacity floor multiplied dispatch slots 6x.
+#: One group (the whole decode batch) is the measured optimum.
+MOE_DECODE_GROUPS = 1
+
+
+# ---------------------------------------------------------------------------
+# pattern plumbing
+# ---------------------------------------------------------------------------
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def combined_period(cfg: ModelConfig) -> int:
+    p = len(cfg.layer_pattern)
+    if cfg.moe is not None:
+        p = _lcm(p, cfg.moe.every)
+    if cfg.local_global_alternate:
+        p = _lcm(p, 2)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def position_kind(cfg: ModelConfig, i: int) -> str:
+    return cfg.layer_pattern[i % len(cfg.layer_pattern)]
+
+
+def position_is_local(cfg: ModelConfig, i: int) -> bool:
+    return cfg.local_global_alternate and (i % 2 == 0)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _mixer_init(key: jax.Array, cfg: ModelConfig, kind: str):
+    if kind == "attn":
+        return attn.attn_init(key, cfg)
+    if kind == "mamba":
+        return ssm_mod.ssm_init(key, cfg)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init(key, cfg)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _ffn_init(key: jax.Array, cfg: ModelConfig, is_moe: bool):
+    if cfg.d_ff == 0:
+        return {}
+    if is_moe:
+        return moe_mod.moe_init(key, cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.family == "audio":    # whisper: plain GELU MLP
+        return {"w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+                "b_in": jnp.zeros((cfg.d_ff,), PARAM_DTYPE),
+                "w_out": dense_init(ks[1], (cfg.d_ff, cfg.d_model)),
+                "b_out": jnp.zeros((cfg.d_model,), PARAM_DTYPE)}
+    return {"w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+            "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff)),
+            "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model))}
+
+
+def layer_init(key: jax.Array, cfg: ModelConfig, i: int) -> Dict:
+    kind = position_kind(cfg, i)
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mixer": _mixer_init(k1, cfg, kind),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ffn": _ffn_init(k2, cfg, cfg.is_moe_layer(i)),
+    }
+
+
+def _apply_ffn(p, x, cfg: ModelConfig, is_moe: bool):
+    if cfg.d_ff == 0:
+        return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+    if is_moe:
+        return moe_mod.moe_forward(p, x, cfg)
+    if cfg.family == "audio":
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_in"])
+                        + p["b_in"])
+        return (jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"],
+                jnp.zeros((), jnp.float32))
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), \
+        jnp.zeros((), jnp.float32)
+
+
+def layer_forward(p, x, positions, cfg: ModelConfig, i: int, *,
+                  causal: bool = True):
+    """Full-sequence block at pattern position i. Returns (x', cache, aux)."""
+    kind = position_kind(cfg, i)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.mla is not None:
+            out, cache = attn.mla_forward(p["mixer"], h, positions, cfg)
+        else:
+            out, cache = attn.gqa_forward(
+                p["mixer"], h, positions, cfg,
+                layer_is_local=position_is_local(cfg, i), causal=causal,
+                use_rope=cfg.family != "audio")
+    elif kind == "mamba":
+        out, cache = ssm_mod.ssm_forward(p["mixer"], h, cfg)
+    elif kind == "mlstm":
+        out, cache = xlstm_mod.mlstm_forward(p["mixer"], h, cfg)
+    elif kind == "slstm":
+        out, cache = xlstm_mod.slstm_forward(p["mixer"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    out, aux = _apply_ffn(p["ffn"], h, cfg, cfg.is_moe_layer(i))
+    return x + out, cache, aux
+
+
+def layer_decode(p, x, cache, cache_pos, cfg: ModelConfig, i: int, *,
+                 seq_axis: Optional[str] = None):
+    """One-token block step. x: (B, d). Returns (x', cache', aux)."""
+    kind = position_kind(cfg, i)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.mla is not None:
+            out, cache = attn.mla_decode(p["mixer"], h, cache, cache_pos, cfg)
+        else:
+            out, cache = attn.gqa_decode(
+                p["mixer"], h, cache, cache_pos, cfg,
+                layer_is_local=position_is_local(cfg, i), seq_axis=seq_axis)
+    elif kind == "mamba":
+        out, cache = ssm_mod.ssm_decode(p["mixer"], h, cache, cfg)
+    elif kind == "mlstm":
+        out, cache = xlstm_mod.mlstm_decode(p["mixer"], h, cache, cfg)
+    elif kind == "slstm":
+        out, cache = xlstm_mod.slstm_decode(p["mixer"], h, cache, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe_layer(i) and cfg.d_ff != 0:
+        # decode MoE: group tokens by data shard (GShard layout) so the
+        # dispatch einsum contracts locally and XLA emits one all-to-all
+        # instead of cross-shard gathers (§Perf hillclimb B).
+        B, d = h.shape
+        G = math.gcd(B, MOE_DECODE_GROUPS)
+        out, aux = _apply_ffn(p["ffn"], h.reshape(G, B // G, d), cfg, True)
+        out = out.reshape(B, d)
+    else:
+        out, aux = _apply_ffn(p["ffn"], h, cfg, False)
+    return x + out, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        return encdec.init_params(key, cfg)
+    P = combined_period(cfg)
+    reps = cfg.n_layers // P
+    keys = jax.random.split(key, P + 4)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1],
+                                       (cfg.d_model, cfg.padded_vocab))
+    for i in range(P):
+        pos_keys = jax.random.split(keys[2 + i], reps)
+        params[f"pos{i}"] = jax.vmap(
+            lambda k, i=i: layer_init(k, cfg, i))(pos_keys)
+    if cfg.num_patches:
+        params["patch_proj"] = dense_init(keys[-2],
+                                          (cfg.d_model, cfg.d_model))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    h = params["embed"][tokens]
+    if cfg.final_softcap is not None:   # gemma2 scales embeddings
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def mask_padding_logits(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """-inf the vocab-padding rows (configs/base.py padded_vocab)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    ids = jnp.arange(cfg.padded_vocab)
+    return jnp.where(ids < cfg.vocab, logits, -1e30)
+
+
+def backbone_forward(params, h, positions, cfg: ModelConfig, *,
+                     causal: bool = True, remat: bool = False
+                     ) -> Tuple[jax.Array, List, jax.Array]:
+    """Run the pattern stack. h: (B, S, d). Returns (h, caches, aux).
+
+    ``remat=True`` wraps the scanned period body in ``jax.checkpoint`` —
+    activations for one period are recomputed in the backward pass, so
+    training activation memory is O(n_layers / P) boundary states.
+    """
+    P = combined_period(cfg)
+    stacked = tuple(params[f"pos{i}"] for i in range(P))
+
+    def body(carry, layer_params):
+        from repro.parallel.sharding import constrain_batch_leading
+        x, aux = carry
+        caches = []
+        for i in range(P):
+            x = constrain_batch_leading(x)   # residual-stream anchor
+            x, cache, a = layer_forward(layer_params[i], x, positions, cfg,
+                                        i, causal=causal)
+            caches.append(cache)
+            aux = aux + a
+        return (x, aux), tuple(caches)
+
+    if remat:
+        body = jax.checkpoint(body)
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), stacked)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, caches, aux
+
+
+def chunked_loss(h: jax.Array, unembed: jax.Array, labels: jax.Array,
+                 mask: jax.Array, cfg: ModelConfig, chunk: int = 512
+                 ) -> jax.Array:
+    """CE over the vocab without materializing (B, S, V) logits."""
+    from repro.models.attention import _pick_chunk
+    B, S, D = h.shape
+    chunk = _pick_chunk(S, chunk)   # S may include patch positions (4352)
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        hi, li, mi = inp
+        # ZeRO mode (§Perf D): replicate the small h chunk so each shard
+        # contracts against its local vocab slice of the (data x model)-
+        # sharded table — re-gathering the multi-GB table per chunk is
+        # the alternative XLA picks otherwise.
+        from repro.parallel import sharding as _shd
+        if _shd.ZERO_DP_ANCHOR:
+            try:
+                am = jax.sharding.get_abstract_mesh()
+                if am is not None and getattr(am, "axis_names", None):
+                    from jax.sharding import PartitionSpec as _P
+                    hi = jax.lax.with_sharding_constraint(
+                        hi, _P(*([None] * hi.ndim)))
+            except Exception:
+                pass
+        logits = jnp.einsum("bsd,dv->bsv", hi, unembed,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = softcap(logits, cfg.final_softcap)
+        logits = mask_padding_logits(logits, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None],
+                                   axis=-1).squeeze(-1)
+        nll, denom = acc
+        return (nll + jnp.sum((logz - gold) * mi), denom + jnp.sum(mi)), None
+
+    (nll, denom), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return nll / jnp.maximum(denom, 1.0)
+
+
+def train_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+               *, aux_weight: float = 0.01) -> Tuple[jax.Array, Dict]:
+    """Next-token CE (+ MoE aux). batch: tokens/labels/mask (B, S)."""
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        return encdec.train_loss(params, batch, cfg)
+    tokens, labels, mask = batch["tokens"], batch["labels"], batch["mask"]
+    B, S = tokens.shape
+    h = _embed(params, tokens, cfg)
+    positions = jnp.arange(S)
+
+    if cfg.num_patches:
+        patches = batch["patches"]                       # (B, Np, d) stub
+        h = jnp.concatenate(
+            [jnp.einsum("bpd,de->bpe", patches.astype(h.dtype),
+                        params["patch_proj"]), h], axis=1)
+        positions = jnp.arange(cfg.num_patches + S)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.num_patches), mask.dtype), mask], axis=1)
+        labels = jnp.concatenate(
+            [jnp.zeros((B, cfg.num_patches), labels.dtype), labels], axis=1)
+
+    h, _, aux = backbone_forward(params, h, positions, cfg, remat=True)
+    loss = chunked_loss(h, _unembed_matrix(params, cfg), labels, mask, cfg)
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple:
+    """Zero caches per pattern position, stacked over repetitions.
+
+    Attention caches allocate (B, max_seq, ...) slots; recurrent caches are
+    O(1). Shapes are identical to what prefill returns (scan-stacked).
+    """
+    P = combined_period(cfg)
+    reps = cfg.n_layers // P
+    hd = cfg.resolved_head_dim
+    caches = []
+    for i in range(P):
+        kind = position_kind(cfg, i)
+        if kind == "attn":
+            if cfg.mla is not None:
+                m = cfg.mla
+                c = attn.AttnCache(
+                    jnp.zeros((reps, batch, max_seq, m.kv_rank),
+                              PARAM_DTYPE),
+                    jnp.zeros((reps, batch, max_seq, m.rope_dim),
+                              PARAM_DTYPE))
+            else:
+                c = attn.AttnCache(
+                    jnp.zeros((reps, batch, max_seq, cfg.n_kv, hd),
+                              PARAM_DTYPE),
+                    jnp.zeros((reps, batch, max_seq, cfg.n_kv, hd),
+                              PARAM_DTYPE))
+        elif kind == "mamba":
+            d_inner, N, d_conv, _ = ssm_mod._dims(cfg)
+            c = ssm_mod.SSMCache(
+                jnp.zeros((reps, batch, d_conv - 1, d_inner), PARAM_DTYPE),
+                jnp.zeros((reps, batch, d_inner, N), jnp.float32))
+        elif kind == "mlstm":
+            d_inner, H, d_qk, d_v = xlstm_mod._mlstm_dims(cfg)
+            c = xlstm_mod.MLSTMCache(
+                jnp.zeros((reps, batch, H, d_qk, d_v), jnp.float32),
+                jnp.zeros((reps, batch, H, d_qk), jnp.float32),
+                jnp.full((reps, batch, H), -1e30, jnp.float32),
+                jnp.zeros((reps, batch, xlstm_mod.D_CONV - 1, d_inner),
+                          PARAM_DTYPE))
+        elif kind == "slstm":
+            d = cfg.d_model
+            c = xlstm_mod.SLSTMCache(
+                jnp.zeros((reps, batch, d), jnp.float32),
+                jnp.zeros((reps, batch, d), jnp.float32),
+                jnp.full((reps, batch, d), -1e30, jnp.float32),
+                jnp.zeros((reps, batch, d), jnp.float32))
+        else:
+            raise ValueError(kind)
+        caches.append(c)
+    return tuple(caches)
+
+
+def decode_step(params, tokens: jax.Array, caches: Tuple,
+                cache_pos: jax.Array, cfg: ModelConfig, *,
+                seq_axis: Optional[str] = None,
+                logits_mode: str = "full"
+                ) -> Tuple[jax.Array, Tuple]:
+    """One decoding step. tokens: (B,) ids; cache_pos: () write index.
+
+    ``logits_mode``: "full" returns (B, V) logits; "none" returns the final
+    hidden state (B, d) (the LSH-decode head consumes hidden states).
+    """
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        return encdec.decode_step(params, tokens, caches, cache_pos, cfg,
+                                  seq_axis=seq_axis, logits_mode=logits_mode)
+    P = combined_period(cfg)
+    h = _embed(params, tokens, cfg)
+    stacked = tuple(params[f"pos{i}"] for i in range(P))
+
+    def body(carry, xs):
+        from repro.parallel.sharding import constrain_batch_leading
+        x, aux = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for i in range(P):
+            x = constrain_batch_leading(x)   # residual-stream anchor
+            x, c, a = layer_decode(layer_params[i], x, layer_caches[i],
+                                   cache_pos, cfg, i, seq_axis=seq_axis)
+            new_caches.append(c)
+            aux = aux + a
+        return (x, aux), tuple(new_caches)
+
+    (h, _), new_caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), (stacked, caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "none":
+        return h, new_caches
+    logits = jnp.einsum("bd,dv->bv", h, _unembed_matrix(params, cfg),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = softcap(logits, cfg.final_softcap)
+    return mask_padding_logits(logits, cfg), new_caches
+
+
+def extend_cache(cfg: ModelConfig, caches: Tuple, max_seq: int) -> Tuple:
+    """Pad prefill attention caches (reps, B, S_prompt, ...) out to
+    ``max_seq`` slots so a decode loop can continue writing into them.
+    Recurrent caches are O(1) and pass through unchanged."""
+    P = combined_period(cfg)
+    out = []
+    for i in range(P):
+        c = caches[i]
+        if position_kind(cfg, i) == "attn":
+            pad = max_seq - c.k.shape[2]
+            out.append(attn.AttnCache(
+                jnp.pad(c.k, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) *
+                        (c.k.ndim - 3)),
+                jnp.pad(c.v, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) *
+                        (c.v.ndim - 3))))
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig,
+            patches: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Tuple]:
+    """Full-sequence forward returning (last hidden (B, d), caches).
+
+    Attention caches come back (reps, B, S, ...) — matching init_cache's
+    layout so a decode loop can continue from them.
+    """
+    B, S = tokens.shape
+    h = _embed(params, tokens, cfg)
+    positions = jnp.arange(S)
+    if cfg.num_patches and patches is not None:
+        h = jnp.concatenate(
+            [jnp.einsum("bpd,de->bpe", patches.astype(h.dtype),
+                        params["patch_proj"]), h], axis=1)
+        positions = jnp.arange(cfg.num_patches + S)
+    h, caches, _ = backbone_forward(params, h, positions, cfg)
+    return h[:, -1], caches

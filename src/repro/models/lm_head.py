@@ -1,0 +1,171 @@
+"""LSH-decode: RANGE-LSH over the unembedding matrix (DESIGN.md §4).
+
+Greedy decoding's argmax over logits IS maximum inner product search: the
+database is the unembedding matrix (up to 256k rows here — LM vocab rows
+have long-tailed 2-norms, exactly the paper's Fig 1b setting) and the query
+is the final hidden state. ``VocabIndex`` builds a RANGE-LSH index over the
+vocab once per checkpoint; ``lsh_topk_tokens`` ranks vocab rows by the
+eq.-12 score from one packed Hamming scan and exactly re-ranks the top-P —
+the probes/recall trade-off of the paper's Fig 2 applied to token search.
+
+Compatibility notes:
+  * gemma2's final logit softcap is ``cap*tanh(logits/cap)`` — strictly
+    monotone, so top-k by inner product == top-k by capped logit; the cap
+    is applied after re-ranking.
+  * training always uses exact logits (softmax needs the full
+    distribution); LSH-decode is serving-only, as the paper's technique is
+    query-time (§Arch-applicability).
+
+Distribution: vocab rows are sharded over the ``model`` axis. Norm-range
+partitioning is applied *within* each shard (ranges need not cross shards
+since eq.-12 scores are globally comparable), each shard re-ranks its local
+top-P exactly, and a (vals, ids) all-gather + replicated merge yields the
+global top-k — Algorithm 2 as one small collective, same shape as
+``core.distributed``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.partition import effective_upper, percentile_partition
+from repro.core.probe import DEFAULT_EPS, item_scores
+from repro.core.range_lsh import index_bits
+from repro.kernels import ops
+
+
+class VocabIndex(NamedTuple):
+    """RANGE-LSH index over the unembedding matrix.
+
+    codes/range_id are in vocab order (NOT norm-sorted): token ids are the
+    identity mapping, which keeps the decode path gather-free.
+    """
+
+    codes: jax.Array      # (V, W) uint32
+    range_id: jax.Array   # (V,) int32
+    upper: jax.Array      # (m,) f32
+    A: jax.Array          # (d+1, hash_bits) f32
+    code_len: int
+    hash_bits: int
+    eps: float
+
+
+def build_vocab_index(unembed: jax.Array, key: jax.Array, *,
+                      code_len: int = 128, num_ranges: int = 64,
+                      eps: float = DEFAULT_EPS, impl: str = "auto"
+                      ) -> VocabIndex:
+    """unembed: (d, V) — indexed over columns (vocab rows)."""
+    items = unembed.T.astype(jnp.float32)                 # (V, d)
+    norms = hashing.l2_norm(items)
+    part = percentile_partition(norms, num_ranges)
+    upper = effective_upper(part)
+    hash_bits = code_len - index_bits(num_ranges)
+    x = items / upper[part.range_id][:, None]
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
+    A = hashing.srp_projections(key, items.shape[-1] + 1, hash_bits)
+    codes = ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl)
+    return VocabIndex(codes, part.range_id, part.upper, A, code_len,
+                      hash_bits, eps)
+
+
+def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
+                    unembed: jax.Array, *, k: int = 8, num_probe: int = 1024,
+                    final_softcap: Optional[float] = None,
+                    true_vocab: Optional[int] = None,
+                    impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Approximate top-k tokens for hidden states (B, d).
+
+    Returns (logit_vals (B, k) f32, token_ids (B, k) int32). Probes the
+    ``num_probe`` best vocab rows by the eq.-12 score, then re-ranks them
+    with exact inner products against the unembedding. ``true_vocab``
+    excludes vocab-padding rows (configs/base.py padded_vocab).
+    """
+    q = hashing.normalize(hidden.astype(jnp.float32))
+    zeros = jnp.zeros((q.shape[0],), q.dtype)
+    q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
+    ham = ops.hamming_scan(q_codes, index.codes, impl=impl)   # (B, V)
+    scores = item_scores(index.upper, index.range_id, ham, index.hash_bits,
+                         index.eps)
+    if true_vocab is not None and true_vocab < index.codes.shape[0]:
+        scores = jnp.where(jnp.arange(index.codes.shape[0]) < true_vocab,
+                           scores, -jnp.inf)
+    _, cand = jax.lax.top_k(scores, num_probe)                # (B, P)
+    cand_vecs = jnp.take(unembed, cand, axis=1)               # (d,) gather
+    # unembed is (d, V): gather columns -> (d, B, P); contract d
+    logits = jnp.einsum("bd,dbp->bp", hidden.astype(jnp.float32),
+                        cand_vecs.astype(jnp.float32))
+    if true_vocab is not None:
+        logits = jnp.where(cand < true_vocab, logits, -jnp.inf)
+    vals, pos = jax.lax.top_k(logits, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    if final_softcap is not None:   # monotone: order unchanged
+        vals = final_softcap * jnp.tanh(vals / final_softcap)
+    return vals, ids
+
+
+def exact_topk_tokens(hidden: jax.Array, unembed: jax.Array, k: int,
+                      final_softcap: Optional[float] = None,
+                      true_vocab: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Exact baseline: full (B, V) logits + top_k."""
+    logits = jnp.einsum("bd,dv->bv", hidden.astype(jnp.float32),
+                        unembed.astype(jnp.float32))
+    if final_softcap is not None:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    if true_vocab is not None and true_vocab < unembed.shape[1]:
+        logits = jnp.where(jnp.arange(unembed.shape[1]) < true_vocab,
+                           logits, -jnp.inf)
+    return jax.lax.top_k(logits, k)
+
+
+def sharded_lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
+                            unembed: jax.Array, mesh, *, k: int = 8,
+                            num_probe_per_shard: int = 256,
+                            axis: str = "model"
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Vocab-sharded LSH-decode (Algorithm 2 as one all-gather).
+
+    index arrays and ``unembed`` must be sharded over ``axis`` on the vocab
+    dimension; ``hidden`` replicated across it. Returns replicated
+    (vals, ids) with *global* token ids.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    V = unembed.shape[1]
+    shards = mesh.shape[axis]
+    v_loc = V // shards
+
+    def local(codes, rid, upper, A, hid, unemb):
+        q = hashing.normalize(hid.astype(jnp.float32))
+        zeros = jnp.zeros((q.shape[0],), q.dtype)
+        qc = ops.hash_encode(q, A[:-1], zeros, A[-1], impl="ref")
+        ham = ops.hamming_scan(qc, codes, impl="ref")
+        sc = item_scores(upper, rid, ham, index.hash_bits, index.eps)
+        _, cand = jax.lax.top_k(sc, num_probe_per_shard)      # local ids
+        cv = jnp.take(unemb, cand, axis=1)                    # (d, B, P)
+        logits = jnp.einsum("bd,dbp->bp", hid.astype(jnp.float32),
+                            cv.astype(jnp.float32))
+        vals, pos = jax.lax.top_k(logits, k)
+        ids = jnp.take_along_axis(cand, pos, axis=1)
+        ids = ids + jax.lax.axis_index(axis) * v_loc          # global ids
+        av = jax.lax.all_gather(vals, axis)                   # (S, B, k)
+        ai = jax.lax.all_gather(ids, axis)
+        S, B, K = av.shape
+        fv = jnp.transpose(av, (1, 0, 2)).reshape(B, S * K)
+        fi = jnp.transpose(ai, (1, 0, 2)).reshape(B, S * K)
+        bv, bp = jax.lax.top_k(fv, k)
+        return bv, jnp.take_along_axis(fi, bp, axis=1)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(), P(None, None), P(),
+                  P(None, axis)),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return fn(index.codes, index.range_id, index.upper, index.A, hidden,
+              unembed)

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: GShard-style one-hot dispatch (EP-friendly).
+
+Routing (top-k, normalized gates) feeds capacity-bounded dispatch/combine
+einsums. Under pjit with experts sharded on the ``model`` mesh axis and
+tokens on ``data``, XLA SPMD lowers the dispatch einsums to all-to-alls —
+the standard expert-parallel pattern (DESIGN.md §6). Tokens are grouped by
+batch row so the dispatch tensor is (B, S, E, C_g) with per-group capacity
+``C_g = ceil(S / E * cf * top_k)`` rather than a global (T, E, C).
+
+Router note (DESIGN.md §Arch-applicability): expert selection IS a MIPS
+problem (token embedding vs expert centroids), but with 16-32 experts exact
+argmax is cheaper than any index, so RANGE-LSH is not applied here.
+
+The MoE layer also returns the load-balancing auxiliary loss
+(Switch/GShard: E * sum_e f_e * p_e).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    m = cfg.moe
+    d_ff = m.d_ff or cfg.d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, m.num_experts),
+                             dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (m.num_experts, cfg.d_model, d_ff)),
+        "w_up": dense_init(ks[2], (m.num_experts, cfg.d_model, d_ff)),
+        "w_down": dense_init(ks[3], (m.num_experts, d_ff, cfg.d_model)),
+    }
+    if m.shared_expert:
+        p["s_gate"] = dense_init(ks[4], (cfg.d_model, d_ff))
+        p["s_up"] = dense_init(ks[5], (cfg.d_model, d_ff))
+        p["s_down"] = dense_init(ks[6], (d_ff, cfg.d_model))
+    return p
+
+
+def group_capacity(group_size: int, num_experts: int, top_k: int,
+                   capacity_factor: float) -> int:
+    c = math.ceil(group_size * top_k * capacity_factor / num_experts)
+    return max(4, min(c, group_size))
+
+
+def moe_forward(p, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss ()).
+
+    Decode calls reshape their (B, d) batch to (1, B, d) — one group.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    C = group_capacity(S, E, K, m.capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                # (B, S, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B, S, K, E)
+    # flatten the k slots in token order so cumsum ranks earlier tokens first
+    flat = onehot.reshape(B, S * K, E)
+    rank = jnp.cumsum(flat, axis=1) - flat                   # (B, S*K, E)
+    rank = jnp.sum(rank * flat, axis=-1).reshape(B, S, K)
+    rank = rank.astype(jnp.int32)                            # (B, S, K)
+    keep = rank < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch (B, S, E, C) / combine tensors
+    rank_oh = jax.nn.one_hot(rank, C, dtype=jnp.float32)     # (B, S, K, C)
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot,
+                          rank_oh * keep[..., None].astype(jnp.float32))
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, onehot, rank_oh)
+
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)
+    g = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["w_gate"]))
+    u = jnp.einsum("ebcd,edf->ebcf", xe, p["w_up"])
+    ye = jnp.einsum("ebcf,efd->ebcd", g * u, p["w_down"])
+    out = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), ye)
+
+    if m.shared_expert:
+        sg = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["s_gate"]))
+        su = jnp.einsum("bsd,df->bsf", x, p["s_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", sg * su, p["s_down"])
+
+    # Switch-style load-balance loss: E * sum_e (frac tokens) * (mean prob)
+    frac = jnp.mean(onehot[..., 0, :] if K == 1 else onehot.sum(2),
+                    axis=(0, 1)) / K
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_p)
+    return out, aux

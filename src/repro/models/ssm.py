@@ -1,0 +1,150 @@
+"""Mamba (selective SSM) block for the Jamba hybrid — chunked associative
+scan formulation (TPU-native; DESIGN.md §3 hardware adaptation).
+
+The CUDA Mamba kernel keeps per-channel states in SRAM and recomputes them
+in the backward pass. The TPU-idiomatic equivalent: the diagonal selective
+recurrence
+
+    h_t = exp(dt_t * A) ⊙ h_{t-1} + dt_t * B_t * x_t,   y_t = C_t · h_t
+
+is a first-order linear recurrence, so within a chunk of length ``Lc`` we
+run ``jax.lax.associative_scan`` over (decay, value) pairs (log-depth on the
+VPU), and carry only the (B, d_inner, N) boundary state between chunks with
+an outer ``lax.scan``. Memory is O(B * Lc * d_inner * N) per chunk instead
+of O(B * S * d_inner * N), and the outer scan keeps the HLO compact for the
+72-layer dry-run.
+
+Decode keeps (conv window, h state) per layer — O(1) per token, which is
+what makes jamba a ``long_500k`` architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PARAM_DTYPE, dense_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, d_inner) rolling conv window
+    h: jax.Array       # (B, d_inner, d_state) recurrent state (f32)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, s.d_state, s.d_conv, dt_rank
+
+
+def ssm_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d_inner, N, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), scale=0.2),
+        "conv_b": jnp.zeros((d_inner,), PARAM_DTYPE),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * N)),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_inner,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        # A stored as log so A = -exp(A_log) stays negative (stable)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (d_inner, N))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_inner, cfg.d_model)),
+    }
+
+
+def _ssm_scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """First-order recurrence h_t = a_t * h_{t-1} + b_t, chunked.
+
+    a, b: (B, S, d_inner, N) f32; h0: (B, d_inner, N).
+    Returns (all h states (B, S, d_inner, N), final h).
+    """
+    B, S, D, N = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    ac = a.reshape(B, nc, chunk, D, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, nc, chunk, D, N).transpose(1, 0, 2, 3, 4)
+
+    def combine(left, right):
+        (a1, b1), (a2, b2) = left, right
+        return a1 * a2, a2 * b1 + b2
+
+    def outer(h, inputs):
+        ai, bi = inputs                         # (B, chunk, D, N)
+        # fold carry into the first step: b'_0 = a_0 * h + b_0
+        bi = bi.at[:, 0].add(ai[:, 0] * h)
+        aa, hh = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        return hh[:, -1], hh
+
+    h_last, hs = jax.lax.scan(outer, h0, (ac, bc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, D, N)
+    return hs, h_last
+
+
+def ssm_forward(p, x: jax.Array, cfg: ModelConfig, *,
+                h0: jax.Array | None = None, chunk: int = 16
+                ) -> Tuple[jax.Array, SSMCache]:
+    """Full-sequence Mamba block. x: (B, S, d_model) -> (B, S, d_model)."""
+    d_inner, N, d_conv, dt_rank = _dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                   # (B, S, d_inner)
+
+    # depthwise causal conv along seq
+    pad = jnp.pad(xi_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(d_conv))
+    xi = jax.nn.silu(conv + p["conv_b"])
+
+    proj = jnp.einsum("bse,er->bsr", xi, p["x_proj"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, p["dt_proj"]
+                                    .astype(jnp.float32)) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                # (d_inner, N)
+    xf = xi.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A)                          # (B,S,D,N)
+    b = (dt * xf)[..., None] * Bm[:, :, None, :]            # (B,S,D,N)
+    h0 = jnp.zeros((B, d_inner, N), jnp.float32) if h0 is None else h0
+    hs, h_last = _ssm_scan_chunked(a, b, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm) + p["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # conv cache holds the last d_conv-1 PRE-activation conv inputs
+    raw_tail = pad[:, S:S + d_conv - 1]
+    return out, SSMCache(raw_tail.astype(x.dtype), h_last)
+
+
+def ssm_decode(p, x: jax.Array, cache: SSMCache, cfg: ModelConfig
+               ) -> Tuple[jax.Array, SSMCache]:
+    """One-token Mamba step. x: (B, d_model)."""
+    d_inner, N, d_conv, dt_rank = _dims(cfg)
+    xz = jnp.einsum("bd,de->be", x, p["in_proj"])
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                   # (B, d_inner)
+
+    window = jnp.concatenate([cache.conv, xi_raw[:, None]], axis=1)
+    conv = jnp.einsum("bce,ce->be", window, p["conv_w"]) + p["conv_b"]
+    xi = jax.nn.silu(conv)
+
+    proj = jnp.einsum("be,er->br", xi, p["x_proj"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("br,re->be", dt,
+                                    p["dt_proj"].astype(jnp.float32))
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xf = xi.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A)                          # (B, D, N)
+    b = (dt * xf)[..., None] * Bm[:, None, :]
+    h = a * cache.h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, SSMCache(window[:, 1:], h)

@@ -1,0 +1,217 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory) and sLSTM.
+
+mLSTM cell (per head, stabilized exponential gating):
+
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    f'  = exp(f~_t + m_{t-1} - m_t),  i' = exp(i~_t - m_t)
+    C_t = f' C_{t-1} + i' k_t v_t^T          (matrix memory, d_qk x d_v)
+    n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t^T q_t) / max(|n_t^T q_t|, 1)
+
+sLSTM keeps scalar memories with block-diagonal (per-head)
+hidden-to-hidden recurrence — strictly sequential, which is why the
+published ratio favors mLSTM 7:1 (our ``pattern``).
+
+Both are implemented as ``lax.scan`` over time (one compiled step body —
+HLO stays small for the 48-block dry-run). The chunkwise-parallel mLSTM
+formulation (TFLA-style) is the known TPU optimization and is listed as a
+§Perf hillclimb candidate; recurrent decode is O(1) per token, making
+xlstm-1.3b a ``long_500k`` architecture.
+
+Simplifications vs the reference CUDA implementation (DESIGN.md §3):
+dense per-head q/k/v projections instead of block-diagonal-4, and the
+post-sLSTM MLP is folded into the block's gated output path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PARAM_DTYPE, dense_init, rms_norm
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array   # (B, H, d_qk, d_v) f32
+    n: jax.Array   # (B, H, d_qk) f32
+    m: jax.Array   # (B, H) f32
+    conv: jax.Array  # (B, d_conv-1, d_inner)
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array   # (B, d_model) f32
+    n: jax.Array   # (B, d_model) f32
+    m: jax.Array   # (B, d_model) f32
+    h: jax.Array   # (B, d_model) f32 (recurrent input)
+
+
+D_CONV = 4
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = int(x.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    d_v = d_inner // H
+    d_qk = int(d_v * x.qk_dim_factor)
+    return d_inner, H, d_qk, d_v
+
+
+def mlstm_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d_inner, H, d_qk, d_v = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks[1], (D_CONV, d_inner), scale=0.2),
+        "conv_b": jnp.zeros((d_inner,), PARAM_DTYPE),
+        "w_q": dense_init(ks[2], (d_inner, H * d_qk)),
+        "w_k": dense_init(ks[3], (d_inner, H * d_qk)),
+        "w_v": dense_init(ks[4], (d_inner, H * d_v)),
+        "w_if": dense_init(ks[5], (d_inner, 2 * H), dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "gn": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[6], (d_inner, cfg.d_model)),
+    }
+
+
+def _mlstm_cell(q, k, v, ig, fg, state):
+    """One time step. q,k: (B,H,dk); v: (B,H,dv); ig,fg: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(fg + m, ig)
+    fp = jnp.exp(fg + m - m_new)
+    ip = jnp.exp(ig - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_forward(p, x: jax.Array, cfg: ModelConfig, *,
+                  cache: MLSTMCache | None = None
+                  ) -> Tuple[jax.Array, MLSTMCache]:
+    """Full-sequence mLSTM block. x: (B, S, d_model)."""
+    d_inner, H, d_qk, d_v = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xm_raw, z = jnp.split(xz, 2, axis=-1)
+    pad = (jnp.concatenate([cache.conv, xm_raw], axis=1) if cache is not None
+           else jnp.pad(xm_raw, ((0, 0), (D_CONV - 1, 0), (0, 0))))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(D_CONV))
+    xc = jax.nn.silu(conv + p["conv_b"])
+
+    q = jnp.einsum("bse,eh->bsh", xc, p["w_q"]).reshape(B, S, H, d_qk)
+    k = jnp.einsum("bse,eh->bsh", xc, p["w_k"]).reshape(B, S, H, d_qk)
+    k = k * d_qk ** -0.5
+    v = jnp.einsum("bse,eh->bsh", xm_raw, p["w_v"]).reshape(B, S, H, d_v)
+    gates = jnp.einsum("bse,eh->bsh", xc.astype(jnp.float32),
+                       p["w_if"]) + p["b_if"]
+    ig, fg_raw = gates[..., :H], gates[..., H:]
+    fg = -jax.nn.softplus(-fg_raw)          # log sigmoid (forget in (0,1))
+
+    if cache is None:
+        state = (jnp.zeros((B, H, d_qk, d_v), jnp.float32),
+                 jnp.zeros((B, H, d_qk), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    else:
+        state = (cache.C, cache.n, cache.m)
+
+    def step(s, inp):
+        qt, kt, vt, it, ft = inp
+        s, h = _mlstm_cell(qt.astype(jnp.float32), kt.astype(jnp.float32),
+                           vt.astype(jnp.float32), it, ft, s)
+        return s, h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+          fg.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_inner)     # (B,S,H*dv)
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", h * jax.nn.silu(z),
+                     p["w_out"])
+    conv_tail = pad[:, S:S + D_CONV - 1]   # last D_CONV-1 raw conv inputs
+    return out, MLSTMCache(state[0], state[1], state[2],
+                           conv_tail.astype(x.dtype))
+
+
+def mlstm_decode(p, x: jax.Array, cache: MLSTMCache, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, MLSTMCache]:
+    out, new = mlstm_forward(p, x[:, None, :], cfg, cache=cache)
+    return out[:, 0], new
+
+
+def slstm_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for (z, i, f, o)
+        "w_x": dense_init(ks[0], (d, 4 * d), dtype=jnp.float32),
+        # block-diagonal recurrent weights per head: (4 gates, H, dh, dh)
+        "r_h": dense_init(ks[1], (4, H, dh, dh), dtype=jnp.float32,
+                          scale=dh ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]),
+        "gn": jnp.zeros((d,), jnp.float32),
+        "w_z": dense_init(ks[2], (d, d)),
+        "w_out": dense_init(ks[3], (d, d)),
+    }
+
+
+def _slstm_cell(p, xt, state, H):
+    """xt: (B, d) f32. state: (c, n, m, h_prev)."""
+    c, n, m, h_prev = state
+    B, d = xt.shape
+    dh = d // H
+    gx = xt @ p["w_x"] + p["b"]                              # (B, 4d)
+    hb = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhj,ghjk->bghk", hb, p["r_h"]).reshape(B, 4 * d)
+    g = gx + rec
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    fg = -jax.nn.softplus(-ft)            # log sigmoid
+    m_new = jnp.maximum(fg + m, it)
+    fp = jnp.exp(fg + m - m_new)
+    ip = jnp.exp(it - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_forward(p, x: jax.Array, cfg: ModelConfig, *,
+                  cache: SLSTMCache | None = None
+                  ) -> Tuple[jax.Array, SLSTMCache]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    if cache is None:
+        state = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(2)) + (
+            jnp.full((B, d), -1e30, jnp.float32),
+            jnp.zeros((B, d), jnp.float32))
+    else:
+        state = (cache.c, cache.n, cache.m, cache.h)
+
+    def step(s, xt):
+        return _slstm_cell(p, xt, s, H)
+
+    state, hs = jax.lax.scan(step, state,
+                             x.astype(jnp.float32).transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)               # (B, S, d)
+    h = rms_norm(h, p["gn"], cfg.norm_eps)
+    z = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["w_z"]))
+    out = jnp.einsum("bsd,de->bse", h * z, p["w_out"])
+    return out, SLSTMCache(*state)
+
+
+def slstm_decode(p, x: jax.Array, cache: SLSTMCache, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, SLSTMCache]:
+    out, new = slstm_forward(p, x[:, None, :], cfg, cache=cache)
+    return out[:, 0], new

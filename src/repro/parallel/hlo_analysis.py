@@ -1,0 +1,245 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes, but not collective
+bytes — we parse the optimized HLO text (§ROOFLINE in the brief), map every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` to its operand/output sizes, and convert to
+*per-device wire bytes* with ring-algorithm factors:
+
+    all-gather:          (g-1)/g * out_bytes     (received)
+    reduce-scatter:      (g-1)/g * in_bytes
+    all-reduce:          2 (g-1)/g * in_bytes    (RS + AG)
+    all-to-all:          (g-1)/g * in_bytes
+    collective-permute:  out_bytes
+
+Scan-aware: collectives inside ``while`` bodies (layer scans, remat
+backward scans) appear once in the text but execute trip-count times. We
+split the module into computations, recover each while's trip count from
+its condition's compare-against-constant, and multiply bytes through the
+(possibly nested) while nesting.
+
+Roofline terms (TPU v5e constants):
+
+    compute    = FLOPs / (chips * 197e12)        [s]
+    memory     = bytes / (chips * 819e9)         [s]
+    collective = wire_bytes_per_device / 50e9    [s] (per-device ICI)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# computation headers start at column 0: "%name (params) -> type {"
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\\?\":\s*\{\\?\"n\\?\":\\?\"(\d+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:   # [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines.
+
+    Headers sit at column 0 and end with '{'; instruction lines are
+    indented; a column-0 '}' closes the computation. Parameter lists may
+    contain arbitrarily nested parens (tuple types), so the name is just
+    the token before the first '('.
+    """
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            if not line.startswith((" ", "\t")) and \
+                    line.rstrip().endswith("{"):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+        else:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count from a while condition: compare(iter, constant(N)), LT."""
+    consts = []
+    for line in cond_lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Execution multiplier per computation from (nested) while loops.
+
+    Trip counts come from XLA's ``backend_config known_trip_count`` when
+    present (always, for lax.scan), falling back to the condition's
+    compare-against-constant."""
+    mult = {name: 1 for name in comps}
+    # body -> (trip, parent) edges
+    edges: List[Tuple[str, int, str]] = []
+    for parent, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.groups()
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps.get(cond, []))
+                edges.append((body, trip, parent))
+    # propagate (few levels of nesting; iterate to fixpoint)
+    for _ in range(8):
+        changed = False
+        for body, trip, parent in edges:
+            want = trip * mult.get(parent, 1)
+            if mult.get(body, 1) != want:
+                mult[body] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_collectives(hlo_text: str, num_devices: int
+                      ) -> List[Dict[str, float]]:
+    """Every collective with byte counts, group size and loop multiplier."""
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+
+    # global instruction name -> output shape string (names are unique)
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                name, rhs = m.groups()
+                sm = _SHAPE_RE.search(rhs)
+                if sm:
+                    shapes[name] = rhs.split(" ")[0]
+
+    out = []
+    for comp_name, lines in comps.items():
+        k = mult.get(comp_name, 1)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")"
+                            r"(?:-start)?\(", rhs)
+            if not opm or "-done(" in rhs:
+                continue
+            op = opm.group(1)
+            out_bytes = _shape_bytes(rhs.split(" ")[0])
+            # operands live in the first paren group only (metadata like
+            # to_apply=%add references other computations — not payload)
+            paren = rhs[rhs.index("("):]
+            arg_str = paren[1:paren.index(")")] if ")" in paren else paren
+            args = re.findall(r"%?([\w.\-]+)", arg_str)
+            in_bytes = sum(_shape_bytes(shapes.get(a, "")) for a in args
+                           if a in shapes)
+            g = _group_size(line, num_devices)
+            wire = _wire_bytes(op, in_bytes or out_bytes, out_bytes, g)
+            out.append({"op": op, "out_bytes": out_bytes,
+                        "in_bytes": in_bytes, "group": g,
+                        "multiplier": k, "wire_bytes": wire * k})
+    return out
+
+
+def _wire_bytes(op: str, in_bytes: int, out_bytes: int, g: int) -> float:
+    g = max(g, 1)
+    f = (g - 1) / g
+    if op == "all-gather":
+        return f * out_bytes
+    if op == "reduce-scatter":
+        return f * in_bytes
+    if op == "all-reduce":
+        return 2.0 * f * in_bytes
+    if op == "all-to-all":
+        return f * in_bytes
+    if op == "collective-permute":
+        return float(out_bytes)
+    return float(out_bytes)
+
+
+def roofline(flops: float, bytes_accessed: float, wire_bytes: float,
+             chips: int, model_flops: Optional[float] = None
+             ) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds (per-step).
+
+    ``flops``/``bytes_accessed`` are whole-program (analytic estimates);
+    ``wire_bytes`` is per-device (parse_collectives sums ring traffic).
+
+    ``roofline_fraction`` is MFU-like: the time the *useful* MODEL_FLOPS
+    would take at peak divided by the dominant term — 1.0 means the step
+    is pure useful compute; waste (redundant flops, memory- or
+    collective-boundness) all push it down. This is the §Perf score.
+    """
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = bytes_accessed / (chips * HBM_BW)
+    collective = wire_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    total = max(compute, memory, collective)
+    useful = (model_flops if model_flops is not None else flops)
+    useful_t = useful / (chips * PEAK_FLOPS)
+    return {**terms, "bottleneck": dom,
+            "roofline_fraction": useful_t / total if total > 0 else 0.0}
+
+
+def summarize_collectives(colls: List[Dict]) -> Dict[str, float]:
+    by_op: Dict[str, float] = {}
+    for c in colls:
+        by_op[c["op"]] = by_op.get(c["op"], 0.0) + c["wire_bytes"]
+    total = sum(by_op.values())
+    by_op["total_wire_bytes"] = total
+    by_op["count"] = float(len(colls))
+    return by_op

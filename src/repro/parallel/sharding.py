@@ -1,0 +1,317 @@
+"""Sharding rules: logical tensor roles -> mesh PartitionSpecs.
+
+Mesh axes (launch/mesh.py): ``data`` (+ ``pod`` when multi-pod) carry the
+batch / FSDP dimension; ``model`` carries TP / EP. Rules are keyed on leaf
+*names* in the param pytree (DESIGN.md §6 table):
+
+  * big 2D weights are sharded 2D: contraction-adjacent dim on ``model``
+    (TP), d_model side on the FSDP axis (``data``) — XLA SPMD inserts the
+    per-layer all-gathers (ZeRO-3 pattern) inside the layer scan;
+  * MoE expert stacks shard experts on ``model`` (EP) + d_model on FSDP;
+  * norms / gates / small tables replicate;
+  * decode KV caches shard **sequence on `model`** — with scores sharded on
+    seq, XLA's partitioned softmax+reduction IS flash-decoding's partial
+    (m, l, o) combine, with only (B, H)-sized collectives per layer. This
+    works for every n_kv (no head-count divisibility constraint), which is
+    why it is the default rather than kv-head sharding;
+  * recurrent (mamba/xLSTM) state shards d_inner (or d_v) on ``model``.
+
+``fsdp`` may be None (pure-TP serving for models that fit) or "data"
+(ZeRO-style, default for training and for >20B-param serving).
+
+The optimizer state mirrors params (AdamW mu/nu get the same spec), so
+ZeRO-sharding of optimizer state is inherited for free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+MODEL = "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the batch: ('pod', 'data') when present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_axes_for_batch(mesh: Mesh, batch: Optional[int]) -> Tuple[str, ...]:
+    """Largest dp-axis prefix whose size divides ``batch`` (long_500k has
+    global_batch=1 — the batch is replicated rather than unevenly split)."""
+    if batch is None:
+        return dp_axes(mesh)
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)
+
+
+def _fsdp(fsdp_axis):
+    return fsdp_axis  # None or "data" (never "pod": pods replicate weights)
+
+
+# name -> base spec (without the stacked leading reps axis)
+def _base_spec(name: str, ndim: int, fsdp) -> P:
+    two_d = {
+        # (in, out) layouts: contraction side / output side
+        "w_q": (fsdp, MODEL), "w_k": (fsdp, MODEL), "w_v": (fsdp, MODEL),
+        "w_o": (MODEL, fsdp),
+        "w_gate": (fsdp, MODEL), "w_up": (fsdp, MODEL),
+        "w_down": (MODEL, fsdp),
+        "w_in": (fsdp, MODEL), "w_out": (MODEL, fsdp),
+        "in_proj": (fsdp, MODEL), "out_proj": (MODEL, fsdp),
+        "x_proj": (MODEL, None), "dt_proj": (None, MODEL),
+        "w_dq": (fsdp, None), "w_uq": (None, MODEL),
+        "w_dkv": (fsdp, None), "w_kr": (fsdp, None),
+        "w_uk": (None, MODEL), "w_uv": (None, MODEL),
+        "w_z": (fsdp, MODEL), "w_x": (fsdp, MODEL),
+        "s_gate": (fsdp, MODEL), "s_up": (fsdp, MODEL),
+        "s_down": (MODEL, fsdp),
+        "w_if": (MODEL, None),
+        "patch_proj": (fsdp, None),
+        "router": (fsdp, None),
+    }
+    one_d = {
+        "b_q": (MODEL,), "b_k": (MODEL,), "b_v": (MODEL,),
+        "b_in": (MODEL,), "conv_b": (MODEL,), "dt_bias": (MODEL,),
+        "D": (MODEL,), "b": (MODEL,),
+    }
+    if name == "embed":
+        return P(MODEL, fsdp)
+    if name == "unembed":
+        return P(fsdp, MODEL)
+    if name == "pos_table":
+        return P(None, fsdp)
+    if name in ("A_log",):
+        return P(MODEL, None)
+    if name in ("conv_w",):
+        return P(None, MODEL)
+    if name == "r_h":
+        return P(None, None, None, None)
+    if name in two_d:
+        return P(*two_d[name])
+    if name in one_d and ndim <= 2:
+        return P(*one_d[name])
+    # norms, gates, scalars, anything unmatched: replicate
+    return P(*([None] * ndim))
+
+
+_STACKED_PREFIXES = ("pos", "layers")
+
+
+def param_specs(params: PyTree, cfg: ModelConfig, *,
+                fsdp_axis: Optional[str] = "data",
+                serve_stationary: bool = False) -> PyTree:
+    """PartitionSpec tree matching ``params``.
+
+    ``serve_stationary`` (§Perf hillclimb B): weights never move at decode
+    time — embed/unembed shard on vocab only (a per-token (d, V) gather
+    was the single biggest decode collective), and MoE expert stacks
+    shard 2D (expert -> model, d_ff -> data) so even 398B-total MoE fits
+    stationary on 256 chips; contractions over the data-sharded d_ff pay
+    one small activation psum per MoE layer instead of multi-GB expert
+    gathers.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1]
+        if serve_stationary and name in ("embed", "unembed"):
+            specs.append(P(MODEL, None) if name == "embed"
+                         else P(None, MODEL))
+            continue
+        if serve_stationary and name == "w_o":
+            # decode: attention output is laid out by (seq-sharded) kv
+            # groups, not 16-way heads — sharding w_o on its H*hd input dim
+            # forced a per-layer re-gather (§Perf B.3); shard the OUTPUT
+            # d_model instead (activation gather is 10x smaller).
+            base = P(None, MODEL)
+            specs.append(_maybe_stack(base, keys, leaf.ndim))
+            continue
+        if name in ("w_k", "w_v", "b_k", "b_v") and cfg.n_kv < 16:
+            # GQA with n_kv < TP width: sharding K/V outputs makes XLA
+            # split head_dim and re-gather kv per flash block (measured
+            # 450 GB/step on qwen3 prefill); FSDP-sharding their input dim
+            # made XLA psum full-batch K/V activations across data
+            # (1.6 GB x n_layers) instead of gathering the 2 MB weights.
+            # These projections are tiny (d_model x n_kv*hd): REPLICATE
+            # fully — the 16-way q-head sharding keeps attention local.
+            base = P(*([None] * (2 if name.startswith("w") else 1)))
+            specs.append(_maybe_stack(base, keys, leaf.ndim))
+            continue
+        # MoE expert stacks: leading expert dim -> EP on model
+        if name in ("w_gate", "w_up", "w_down") and any(
+                "ffn" in k for k in keys) and cfg.moe is not None:
+            # distinguish dense vs expert ffn by rank (expert stacks are 3D
+            # before layer-stacking, 4D after)
+            if leaf.ndim >= 3 + _is_stacked(keys):
+                if serve_stationary:
+                    base = (P(MODEL, None, "data")
+                            if name in ("w_gate", "w_up")
+                            else P(MODEL, "data", None))
+                else:
+                    base = (P(MODEL, _fsdp(fsdp_axis), None)
+                            if name in ("w_gate", "w_up")
+                            else P(MODEL, None, _fsdp(fsdp_axis)))
+                specs.append(_maybe_stack(base, keys, leaf.ndim))
+                continue
+        base = _base_spec(name, leaf.ndim - _is_stacked(keys),
+                          _fsdp(fsdp_axis))
+        specs.append(_maybe_stack(base, keys, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _is_stacked(keys) -> bool:
+    return any(str(k).startswith(_STACKED_PREFIXES) for k in keys)
+
+
+def _maybe_stack(base: P, keys, ndim: int) -> P:
+    if _is_stacked(keys) and len(base) == ndim - 1:
+        return P(None, *base)
+    if len(base) != ndim:   # fallback: replicate mismatched ranks
+        return P(*([None] * ndim))
+    return base
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / state specs
+# ---------------------------------------------------------------------------
+
+
+def zero_dp_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    """§Perf hillclimb D: pure ZeRO data parallelism for training.
+
+    When global_batch divides the WHOLE mesh, TP buys nothing but f32
+    activation psums ((B_loc, S, D)-sized, 2+/layer — 926 GB/step on
+    gemma2 train_4k). Instead: batch shards over every mesh axis and each
+    parameter shards over ('data','model') on its largest divisible dim —
+    comms become per-layer weight all-gathers + one gradient
+    reduce-scatter, all overlappable. Tensors with no divisible dim
+    (tiny) replicate.
+    """
+    shards = 1
+    for a in ("data", "model"):
+        shards *= mesh.shape[a]
+    axes = ("data", "model")
+
+    def spec(leaf):
+        best = None
+        for dim in range(leaf.ndim - 1, -1, -1):   # prefer trailing dims
+            if leaf.shape[dim] % shards == 0 and leaf.shape[dim] >= shards:
+                if best is None or leaf.shape[dim] > leaf.shape[best]:
+                    best = dim
+        parts = [None] * leaf.ndim
+        if best is not None:
+            parts[best] = axes
+        return P(*parts)
+
+    return jax.tree.map(spec, params)
+
+
+#: trace-time switch: include 'model' in the activation batch anchor
+#: (set by launchers when using zero_dp_specs).
+ZERO_DP_ANCHOR = False
+
+
+def batch_specs(mesh: Mesh, kind: str) -> PyTree:
+    dp = dp_axes(mesh)
+    if kind == "train":
+        s = {"tokens": P(dp, None), "labels": P(dp, None),
+             "mask": P(dp, None)}
+        return s
+    if kind == "decode":
+        return {"tokens": P(dp), "positions": P(dp)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh,
+                batch: Optional[int] = None) -> Any:
+    """Specs mirroring lm.init_cache's pytree. Sequence -> model axis."""
+    from repro.models import lm as lm_mod
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+    from repro.models import xlstm as xlstm_mod
+
+    dp = dp_axes_for_batch(mesh, batch)
+    if cfg.is_encoder_decoder:
+        return {
+            "self": attn_mod.AttnCache(P(None, dp, MODEL, None, None),
+                                       P(None, dp, MODEL, None, None)),
+            "cross_k": P(None, dp, None, None, None),
+            "cross_v": P(None, dp, None, None, None),
+        }
+    Pd = lm_mod.combined_period(cfg)
+    out = []
+    for i in range(Pd):
+        kind = lm_mod.position_kind(cfg, i)
+        if kind == "attn":
+            if cfg.mla is not None:
+                out.append(attn_mod.AttnCache(P(None, dp, MODEL, None),
+                                              P(None, dp, MODEL, None)))
+            else:
+                out.append(attn_mod.AttnCache(
+                    P(None, dp, MODEL, None, None),
+                    P(None, dp, MODEL, None, None)))
+        elif kind == "mamba":
+            out.append(ssm_mod.SSMCache(P(None, dp, None, MODEL),
+                                        P(None, dp, MODEL, None)))
+        elif kind == "mlstm":
+            out.append(xlstm_mod.MLSTMCache(
+                P(None, dp, None, None, MODEL),
+                P(None, dp, None, None),
+                P(None, dp, None),
+                P(None, dp, None, MODEL)))
+        elif kind == "slstm":
+            out.append(xlstm_mod.SLSTMCache(
+                P(None, dp, MODEL), P(None, dp, MODEL),
+                P(None, dp, MODEL), P(None, dp, MODEL)))
+    return tuple(out)
+
+
+def to_shardings(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_batch_leading(x: jax.Array) -> jax.Array:
+    """Pin an activation's leading (batch) dim to the dp axes, rest
+    replicated — the residual-stream anchor.
+
+    Without this, XLA's sharding propagation is free to push 2D weight
+    shardings INTO activations (measured: full-batch K/V psums across the
+    data axis, 1.6 GB x n_layers on qwen3 prefill). Requires an ambient
+    mesh (``with jax.set_mesh(mesh):`` around lowering — launchers do
+    this); no-op when no mesh is set, so model code stays usable
+    stand-alone.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not getattr(am, "axis_names", None):
+        return x
+    axes = []
+    prod = 1
+    cands = ("pod", "data", "model") if ZERO_DP_ANCHOR else ("pod", "data")
+    for a in cands:
+        if a in am.axis_names and x.shape[0] % (prod * am.shape[a]) == 0:
+            axes.append(a)
+            prod *= am.shape[a]
+    # NOTE (§Perf A.3, refuted): Megatron-style sequence parallelism
+    # (seq dim of 3D residuals -> 'model') measured 13x WORSE here —
+    # the causal-skip q-chunk loop slices the seq dim, so every chunk
+    # boundary re-gathered the sharded residual (29 GB -> 393 GB wire).
+    # Batch-only anchoring is the measured optimum with chunked flash.
+    spec = P(tuple(axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,18 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def longtail_ds():
+    """Small long-tail MIPS dataset (ImageNet-like norm profile)."""
+    from repro.data.synthetic import make_dataset
+    return make_dataset("imagenet", jax.random.PRNGKey(0), n=4000, d=32,
+                        num_queries=32)
+
+
+@pytest.fixture(scope="session")
+def flat_ds():
+    from repro.data.synthetic import make_dataset
+    return make_dataset("netflix", jax.random.PRNGKey(1), n=3000, d=32,
+                        num_queries=32)

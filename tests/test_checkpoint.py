@@ -1,0 +1,84 @@
+"""Checkpoint manager: roundtrip, integrity, GC, async, restart."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree():
+    return {
+        "w": jnp.full((4, 3), 1.5, jnp.bfloat16),
+        "b": jnp.arange(5, dtype=jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": {"m": jnp.ones((2, 2), jnp.float32)},
+    }
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(3, tree)
+    restored = mgr.restore(3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save_async(11, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 11
+    step, restored = mgr.restore_latest(tree)
+    assert step == 11
+
+
+def test_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    path = mgr.save(5, tree)
+    # corrupt the manifest's crc
+    mpath = os.path.join(path, "manifest.json")
+    man = json.load(open(mpath))
+    first = next(iter(man["leaves"]))
+    man["leaves"][first]["crc32"] ^= 0xFF
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(IOError):
+        mgr.restore(5, tree)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree)
+    bad = dict(tree, w=jnp.zeros((2, 2), jnp.bfloat16))
+    with pytest.raises(ValueError):
+        mgr.restore(1, bad)
+
+
+def test_restart_resumes_from_latest(tmp_path):
+    """Crash/restart contract: a fresh manager over the same directory
+    restores the newest complete step."""
+    mgr1 = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr1.save(10, tree)
+    mgr2 = CheckpointManager(str(tmp_path))
+    step, _ = mgr2.restore_latest(tree)
+    assert step == 10

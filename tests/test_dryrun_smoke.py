@@ -1,0 +1,66 @@
+"""Dry-run smoke: one production cell compiled in a 512-device subprocess.
+
+The full 32-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun
+--all`` (results in experiments/dryrun/); here we pin the machinery — mesh
+construction, abstract lowering, compile, HLO collective parsing — on the
+cheapest cell so the contract stays covered by pytest.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(sys.path))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen3_0_6b", "--shape", "decode_32k", "--mesh", "pod",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "qwen3_0_6b__decode_32k__pod.json"))
+    assert rec["ok"]
+    assert rec["chips"] == 256
+    assert rec["roofline"]["compute_s"] > 0
+    assert rec["collectives"]["total_wire_bytes"] > 0
+
+
+def test_hlo_parser_scan_multipliers():
+    """Collectives inside while bodies are multiplied by trip count."""
+    from repro.parallel import hlo_analysis as hlo
+    text = """
+HloModule test
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %ar = f32[128]{0} all-reduce(%gte), replica_groups={{0,1,2,3}}
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main () -> f32[128] {
+  %init = (s32[], f32[128]) tuple(%zero, %x)
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  %ag = f32[512]{0} all-gather(%y), replica_groups={{0,1,2,3}}
+  ROOT %r = f32[128] get-tuple-element(%w), index=1
+}
+"""
+    colls = hlo.parse_collectives(text, 4)
+    by_op = {c["op"]: c for c in colls}
+    assert by_op["all-reduce"]["multiplier"] == 7
+    assert by_op["all-gather"]["multiplier"] == 1
+    # all-reduce wire = 2 * (3/4) * 512 bytes * 7 trips
+    assert by_op["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 0.75 * 512 * 7)
+    assert by_op["all-gather"]["wire_bytes"] == pytest.approx(
+        0.75 * 2048)

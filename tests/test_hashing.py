@@ -1,0 +1,109 @@
+"""Unit + property tests for the LSH math layer (eqs. 2-9, 12)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import hashing
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def test_simple_lsh_transform_preserves_inner_product():
+    """eq. (8): P(q)^T P(x) == q^T x for unit q, ||x|| <= 1."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 8))
+    x = x / (jnp.linalg.norm(x, axis=1, keepdims=True) + 1.0)   # ||x|| < 1
+    q = hashing.normalize(jax.random.normal(jax.random.PRNGKey(1), (4, 8)))
+    px = hashing.simple_lsh_transform(x)
+    pq = hashing.simple_lsh_query_transform(q)
+    np.testing.assert_allclose(np.asarray(pq @ px.T), np.asarray(q @ x.T),
+                               atol=1e-5)
+    # transformed items are unit-norm
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(px, axis=1)),
+                               1.0, atol=1e-5)
+
+
+def test_l2_alsh_distance_identity():
+    """eq. (6): ||P(x) - Q(q)||^2 = 1 + m/4 - 2 U x.q + ||Ux||^{2^{m+1}}."""
+    m, U = 3, 0.83
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 6))
+    x = 0.9 * x / jnp.linalg.norm(x, axis=1, keepdims=True)   # ||x|| <= 0.9
+    q = hashing.normalize(jax.random.normal(jax.random.PRNGKey(1), (3, 6)))
+    px = hashing.l2_alsh_item_transform(x, m, U)
+    qq = hashing.l2_alsh_query_transform(q, m)
+    d2 = jnp.sum((px[None] - qq[:, None]) ** 2, axis=-1)
+    ux_norm2 = jnp.sum((U * x) ** 2, axis=-1)
+    expect = (1.0 + m / 4.0 - 2.0 * U * (q @ x.T)
+              + ux_norm2[None] ** (2 ** m))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(expect),
+                               rtol=1e-4)
+
+
+@given(st.integers(1, 200), st.integers(1, 4))
+def test_pack_unpack_roundtrip(n_bits, rows):
+    rng = np.random.default_rng(n_bits * 7 + rows)
+    bits = rng.integers(0, 2, (rows, n_bits)).astype(np.uint8)
+    packed = hashing.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (rows, (n_bits + 31) // 32)
+    back = hashing.unpack_bits(packed, n_bits)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@given(st.integers(1, 128))
+def test_hamming_matches_bit_diff(n_bits):
+    rng = np.random.default_rng(n_bits)
+    a = rng.integers(0, 2, (3, n_bits)).astype(np.uint8)
+    b = rng.integers(0, 2, (5, n_bits)).astype(np.uint8)
+    pa, pb = hashing.pack_bits(jnp.asarray(a)), hashing.pack_bits(
+        jnp.asarray(b))
+    ham = hashing.hamming_matrix(pa, pb)
+    expect = (a[:, None, :] != b[None, :, :]).sum(-1)
+    np.testing.assert_array_equal(np.asarray(ham), expect)
+
+
+def test_srp_collision_probability_montecarlo():
+    """eq. (4): P[h(x) = h(y)] = 1 - theta/pi (10k projections)."""
+    d = 16
+    key = jax.random.PRNGKey(0)
+    x = hashing.normalize(jax.random.normal(key, (1, d)))[0]
+    y = hashing.normalize(jax.random.normal(jax.random.PRNGKey(1), (1, d)))[0]
+    A = hashing.srp_projections(jax.random.PRNGKey(2), d, 10000)
+    hits = jnp.mean((hashing.srp_hash(x, A) == hashing.srp_hash(y, A))
+                    .astype(jnp.float32))
+    expect = hashing.srp_collision_prob(jnp.dot(x, y))
+    assert abs(float(hits) - float(expect)) < 0.02
+
+
+def test_l2_collision_probability_montecarlo():
+    """eq. (3) vs simulation for the L2 LSH family."""
+    d, r = 8, 2.5
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((d,))
+    y = jnp.ones((d,)) * 0.5
+    dist = float(jnp.linalg.norm(x - y))
+    a, b = hashing.l2_hash_params(key, d, 20000, r)
+    hx = hashing.l2_hash(x, a, b, r)
+    hy = hashing.l2_hash(y, a, b, r)
+    rate = float(jnp.mean((hx == hy).astype(jnp.float32)))
+    expect = float(hashing.l2_collision_prob(jnp.asarray(dist), r))
+    assert abs(rate - expect) < 0.02
+
+
+def test_fused_encode_equals_explicit_transform():
+    """Folded augmentation == hashing the explicit eq.-8 transform."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 8))
+    x = x / (jnp.linalg.norm(x, axis=1, keepdims=True) + 0.5)
+    A = hashing.srp_projections(jax.random.PRNGKey(1), 9, 16)
+    explicit = hashing.srp_hash(hashing.simple_lsh_transform(x), A)
+    fused = hashing.srp_hash_fused_simple(x, A)
+    np.testing.assert_array_equal(np.asarray(explicit), np.asarray(fused))

@@ -1,0 +1,107 @@
+"""Index-level behaviour: SIMPLE-LSH, RANGE-LSH, L2-ALSH engines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import l2_alsh, range_lsh, simple_lsh, topk
+
+
+def test_exact_recovery_when_probing_everything(longtail_ds):
+    """With num_probe == n the exact top-k must be recovered (re-rank is
+    exact) — for all three index types."""
+    items, queries = longtail_ds.items, longtail_ds.queries[:8]
+    n = items.shape[0]
+    _, truth = topk.exact_mips(queries, items, 5)
+    for build, mod in [
+        (lambda: simple_lsh.build(items, jax.random.PRNGKey(1), 32),
+         simple_lsh),
+        (lambda: range_lsh.build(items, jax.random.PRNGKey(1), 32, 16),
+         range_lsh),
+        (lambda: l2_alsh.build(items, jax.random.PRNGKey(1), 32), l2_alsh),
+    ]:
+        idx = build()
+        _, ids = mod.query(idx, queries, 5, n)
+        assert float(topk.recall_at(ids, truth)) == 1.0
+
+
+def test_range_beats_simple_on_longtail(longtail_ds):
+    """The paper's headline claim (Fig 2 bottom row): at equal probe
+    budget, RANGE-LSH recalls more on long-tail data."""
+    items, queries = longtail_ds.items, longtail_ds.queries
+    n = items.shape[0]
+    _, truth = topk.exact_mips(queries, items, 10)
+    probes = [int(0.02 * n), int(0.1 * n)]
+    si = simple_lsh.build(items, jax.random.PRNGKey(3), 32)
+    ri = range_lsh.build(items, jax.random.PRNGKey(3), 32, 32)
+    rec_s = topk.probed_recall_curve(
+        simple_lsh.probe_order(si, queries), truth, probes)
+    rec_r = topk.probed_recall_curve(
+        range_lsh.probe_order(ri, queries), truth, probes)
+    assert float(rec_r[0]) > float(rec_s[0])
+    assert float(rec_r[1]) > float(rec_s[1])
+
+
+def test_range_not_worse_on_flat_norms(flat_ds):
+    """Robustness claim (§4): on ~equal-norm data RANGE-LSH stays within
+    noise of SIMPLE-LSH."""
+    items, queries = flat_ds.items, flat_ds.queries
+    n = items.shape[0]
+    _, truth = topk.exact_mips(queries, items, 10)
+    probes = [int(0.1 * n)]
+    si = simple_lsh.build(items, jax.random.PRNGKey(3), 32)
+    ri = range_lsh.build(items, jax.random.PRNGKey(3), 32, 32)
+    rec_s = float(topk.probed_recall_curve(
+        simple_lsh.probe_order(si, queries), truth, probes)[0])
+    rec_r = float(topk.probed_recall_curve(
+        range_lsh.probe_order(ri, queries), truth, probes)[0])
+    assert rec_r >= rec_s - 0.05
+
+
+def test_index_bit_budget():
+    """§4 protocol: ceil(log2 m) bits of the code budget go to the range
+    index."""
+    assert range_lsh.index_bits(32) == 5
+    assert range_lsh.index_bits(64) == 6
+    assert range_lsh.index_bits(1) == 0
+    items = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+    idx = range_lsh.build(items, jax.random.PRNGKey(1), 16, 32)
+    assert idx.hash_bits == 11
+    assert idx.codes.shape == (256, 1)
+    with pytest.raises(ValueError):
+        range_lsh.build(items, jax.random.PRNGKey(1), 5, 64)
+
+
+def test_bucket_balance_improves(longtail_ds):
+    """§3.2: RANGE-LSH occupies more buckets with a smaller max bucket."""
+    items = longtail_ds.items
+    si = simple_lsh.build(items, jax.random.PRNGKey(2), 32)
+    ri = range_lsh.build(items, jax.random.PRNGKey(2), 32, 32)
+    b_s, m_s = simple_lsh.bucket_stats(si)
+    b_r, m_r = range_lsh.bucket_stats(ri)
+    assert b_r > b_s
+    assert m_r <= m_s
+
+
+def test_ranged_l2_alsh_beats_plain(longtail_ds):
+    """§5: partitioning helps L2-ALSH too."""
+    items, queries = longtail_ds.items, longtail_ds.queries
+    n = items.shape[0]
+    _, truth = topk.exact_mips(queries, items, 10)
+    probes = [int(0.1 * n)]
+    plain = l2_alsh.build(items, jax.random.PRNGKey(5), 32)
+    ranged = l2_alsh.build_ranged(items, jax.random.PRNGKey(5), 32, 16)
+    rec_p = float(topk.probed_recall_curve(
+        l2_alsh.probe_order(plain, queries), truth, probes)[0])
+    rec_r = float(topk.probed_recall_curve(
+        l2_alsh.probe_order(ranged, queries), truth, probes)[0])
+    assert rec_r >= rec_p - 0.02
+
+
+def test_sorted_probe_table_consistency(longtail_ds):
+    idx = range_lsh.build(longtail_ds.items, jax.random.PRNGKey(0), 32, 16)
+    tab = range_lsh.sorted_probe_table(idx)
+    assert tab.score.shape[0] == 16 * (idx.hash_bits + 1)
+    s = np.asarray(tab.score)
+    assert np.all(np.diff(s) <= 1e-6)

@@ -1,0 +1,69 @@
+"""Property tests for norm-range partitioning (Algorithm 1 invariants)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.partition import (effective_upper, percentile_partition,
+                                  single_partition, uniform_partition)
+
+
+@given(st.integers(10, 400), st.integers(1, 16), st.booleans())
+def test_percentile_partition_invariants(n, m, with_ties):
+    rng = np.random.default_rng(n * 31 + m)
+    norms = rng.lognormal(0.0, 1.0, n).astype(np.float32)
+    if with_ties:
+        norms[: n // 2] = norms[0]        # heavy ties (Algorithm 1 note)
+    part = percentile_partition(jnp.asarray(norms), m)
+    rid = np.asarray(part.range_id)
+    counts = np.asarray(part.counts)
+    # (1) every item assigned to a valid range; counts consistent
+    assert rid.min() >= 0 and rid.max() < m
+    assert counts.sum() == n
+    np.testing.assert_array_equal(counts, np.bincount(rid, minlength=m))
+    # (2) percentile slabs are balanced within 1
+    assert counts.max() - counts.min() <= 1
+    # (3) ranges are norm-ordered: max norm of range j <= min norm of the
+    # next NON-EMPTY range (m > n leaves empty trailing ranges)
+    upper = np.asarray(part.upper)
+    lower = np.asarray(part.lower)
+    occupied = [j for j in range(m) if counts[j] > 0]
+    for a, b in zip(occupied, occupied[1:]):
+        assert upper[a] <= lower[b] + 1e-6
+    # (4) upper/lower are true extrema
+    for j in range(m):
+        sel = norms[rid == j]
+        if sel.size:
+            assert abs(upper[j] - sel.max()) < 1e-6
+            assert abs(lower[j] - sel.min()) < 1e-6
+
+
+@given(st.integers(10, 300), st.integers(1, 12))
+def test_uniform_partition_invariants(n, m):
+    rng = np.random.default_rng(n * 13 + m)
+    norms = rng.lognormal(0.0, 0.8, n).astype(np.float32)
+    part = uniform_partition(jnp.asarray(norms), m)
+    rid = np.asarray(part.range_id)
+    assert rid.min() >= 0 and rid.max() < m
+    assert np.asarray(part.counts).sum() == n
+    # uniform bins: same-bin items are within one bin width
+    width = (norms.max() - norms.min()) / m + 1e-6
+    for j in np.unique(rid):
+        sel = norms[rid == j]
+        assert sel.max() - sel.min() <= width + 1e-4
+
+
+def test_single_partition_is_simple_lsh():
+    norms = jnp.asarray([1.0, 2.0, 0.5, 3.0])
+    part = single_partition(norms)
+    assert part.num_ranges == 1
+    assert float(part.upper[0]) == 3.0
+    assert int(part.counts[0]) == 4
+
+
+def test_effective_upper_fills_empty_ranges():
+    norms = jnp.asarray([1.0, 1.0, 1.0, 5.0])
+    part = uniform_partition(norms, 8)     # middle bins empty
+    upper = effective_upper(part)
+    assert bool(jnp.all(upper > 0))

@@ -1,0 +1,72 @@
+"""Tests for the eq.-12 similarity metric and probe ordering (§3.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probe import (item_scores, probe_table, similarity_estimate)
+
+
+def test_probe_table_size_and_order():
+    """Size m(L+1) (footnote 3) and descending scores."""
+    upper = jnp.asarray([0.3, 0.7, 1.0])
+    L = 16
+    tab = probe_table(upper, L, eps=0.05)
+    assert tab.score.shape == (3 * (L + 1),)
+    s = np.asarray(tab.score)
+    assert np.all(np.diff(s) <= 1e-6)
+
+
+def test_dense_scores_traverse_table_order():
+    """Dense per-item ranking == traversing the sorted (U_j, l) table."""
+    rng = np.random.default_rng(0)
+    m, L, n = 4, 12, 200
+    upper = jnp.asarray(np.sort(rng.uniform(0.2, 1.0, m)))
+    range_id = jnp.asarray(rng.integers(0, m, n))
+    ham = jnp.asarray(rng.integers(0, L + 1, (1, n)))
+    dense = np.asarray(item_scores(upper, range_id, ham, L))[0]
+    tab = probe_table(upper, L)
+    # expected score of each item via its (j, l) entry in the table
+    lookup = {}
+    for j, l, s in zip(np.asarray(tab.range_idx), np.asarray(tab.match_cnt),
+                       np.asarray(tab.score)):
+        lookup[(int(j), int(l))] = float(s)
+    expect = np.array([lookup[(int(range_id[i]), int(L - ham[0, i]))]
+                       for i in range(n)])
+    np.testing.assert_allclose(dense, expect, rtol=1e-5)
+
+
+def test_larger_match_count_scores_higher_within_range():
+    upper = jnp.asarray([0.5])
+    L = 16
+    ls = jnp.arange(L + 1)
+    s = similarity_estimate(upper[0], ls, L)
+    assert bool(jnp.all(jnp.diff(s) > 0))
+
+
+def test_epsilon_softens_negative_zone():
+    """§3.3: with eps > 0, the score only goes negative below
+    l = L (1/2 - eps/(2(1-eps))) — large-U_j buckets with slightly
+    unlucky l are not pushed to the end."""
+    L = 32
+    l_half = L // 2 - 1           # just under L/2
+    s_no_eps = similarity_estimate(jnp.asarray(1.0), jnp.asarray(l_half),
+                                   L, eps=0.0)
+    s_eps = similarity_estimate(jnp.asarray(1.0), jnp.asarray(l_half),
+                                L, eps=0.1)
+    assert float(s_no_eps) < 0.0 <= float(s_eps)
+
+
+def test_cross_range_ranking_uses_norm():
+    """With equal match counts, the larger-U_j bucket is probed first when
+    l > L/2 (paper's discussion below eq. 12)."""
+    L = 16
+    upper = jnp.asarray([0.3, 1.0])
+    l = jnp.asarray(12)           # > L/2
+    s_small = similarity_estimate(upper[0], l, L)
+    s_big = similarity_estimate(upper[1], l, L)
+    assert float(s_big) > float(s_small)
+    # and the opposite when l < L/2 (cos < 0 flips the preference)
+    l = jnp.asarray(2)
+    s_small = similarity_estimate(upper[0], l, L, eps=0.0)
+    s_big = similarity_estimate(upper[1], l, L, eps=0.0)
+    assert float(s_big) < float(s_small)

@@ -1,0 +1,110 @@
+"""Serving path: jitted decode, LSH-decode head, batched generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import serve
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm, lm_head
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("qwen3_0_6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_decode_step_jitted(small_lm):
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    fn = serve.make_decode_step(cfg, mesh)
+    caches = lm.init_cache(cfg, 4, 32)
+    logits, caches = fn(params, jnp.zeros((4,), jnp.int32), caches,
+                        jnp.asarray(0, jnp.int32))
+    assert logits.shape == (4, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[:, :cfg.vocab]).all())
+
+
+def test_lsh_decode_head_agreement(small_lm):
+    """LSH-decode top-1 matches exact greedy for most positions at a
+    moderate probe budget, and exactly at full probe budget."""
+    cfg, params = small_lm
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (16, cfg.d_model))
+    index = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(2),
+                                      code_len=64, num_ranges=16)
+    _, exact = lm_head.exact_topk_tokens(hidden, unembed, 1,
+                                         true_vocab=cfg.vocab)
+    _, full = lm_head.lsh_topk_tokens(index, hidden, unembed, k=1,
+                                      num_probe=cfg.padded_vocab,
+                                      true_vocab=cfg.vocab)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(exact))
+    _, approx = lm_head.lsh_topk_tokens(index, hidden, unembed, k=1,
+                                        num_probe=128,
+                                        true_vocab=cfg.vocab)
+    agree = float(jnp.mean((approx[:, 0] == exact[:, 0])
+                           .astype(jnp.float32)))
+    assert agree >= 0.5
+
+
+def test_batched_server_generate(small_lm):
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 5), 0,
+                                 cfg.vocab)
+    out = server.generate(prompts, steps=4)
+    assert out.shape == (2, 4)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab).all())
+
+
+def test_batched_server_lsh_decode(small_lm):
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    vidx = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(5),
+                                     code_len=64, num_ranges=16)
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 lsh_decode=True, vocab_index=vidx,
+                                 num_probe=cfg.padded_vocab)
+    exact_server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out_lsh = server.generate(prompts, steps=3)
+    out_exact = exact_server.generate(prompts, steps=3)
+    # full probe budget => greedy decode is identical
+    np.testing.assert_array_equal(np.asarray(out_lsh),
+                                  np.asarray(out_exact))
+
+
+def test_greedy_continuation_matches_teacher_forcing(small_lm):
+    """prefill -> extend_cache -> decode produces the same next token as a
+    full forward pass at each step (teacher-forced prefix)."""
+    cfg, params = small_lm
+    B, S = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab)
+    last_hidden, caches = lm.prefill(params, toks, cfg)
+    caches = lm.extend_cache(cfg, caches, 16)
+    # teacher forcing: full forward over the same prefix
+    h_full, _, _ = lm.backbone_forward(
+        params, lm._embed(params, toks, cfg), jnp.arange(S), cfg)
+    h_full = lm.rms_norm(h_full, params["final_norm"], cfg.norm_eps)
+    np.testing.assert_allclose(np.asarray(last_hidden, np.float32),
+                               np.asarray(h_full[:, -1], np.float32),
+                               atol=3e-2, rtol=3e-2)
+    # one decode step from the prefill cache == forward at position S
+    nxt = jax.random.randint(jax.random.PRNGKey(8), (B,), 0, cfg.vocab)
+    h_dec, _ = lm.decode_step(params, nxt, caches,
+                              jnp.asarray(S, jnp.int32), cfg,
+                              logits_mode="none")
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    h_full2, _, _ = lm.backbone_forward(
+        params, lm._embed(params, toks2, cfg), jnp.arange(S + 1), cfg)
+    h_full2 = lm.rms_norm(h_full2, params["final_norm"], cfg.norm_eps)
+    np.testing.assert_allclose(np.asarray(h_dec, np.float32),
+                               np.asarray(h_full2[:, -1], np.float32),
+                               atol=3e-2, rtol=3e-2)

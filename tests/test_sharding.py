@@ -1,0 +1,93 @@
+"""Sharding rules: every arch's param tree gets rank-consistent specs and
+the production-mesh dimensions divide (or pad legally)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import lm
+from repro.parallel import sharding as shd
+from repro.parallel.analytic import estimate, matmul_param_counts
+from repro.configs.base import SHAPES
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_rank_match(arch):
+    """Spec length == leaf rank for every parameter of every arch (full
+    config, abstract — no allocation)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    for mode in ({"fsdp_axis": "data"}, {"fsdp_axis": None},
+                 {"fsdp_axis": None, "serve_stationary": True}):
+        specs = shd.param_specs(params, cfg, **mode)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) == leaf.ndim, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_model_axis_dims_shardable(arch):
+    """Dims mapped to the 16-way model axis are multiples of 16 or vocab
+    (padded to 256). GSPMD tolerates remainders, but the production rules
+    should not rely on it for the big tensors."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    specs = shd.param_specs(params, cfg, fsdp_axis="data")
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    sflat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat, sflat):
+        for dim, axis in enumerate(spec):
+            if axis == "model" and leaf.shape[dim] >= 256:
+                assert leaf.shape[dim] % 16 == 0, (path, leaf.shape, spec)
+
+
+def test_dp_axes_for_batch():
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert shd.dp_axes_for_batch(mesh, 1) == ("data",)
+    # a fake mesh-shape check via the sharding helper contract:
+    # batch=1 on a 16-way axis must not be sharded
+    from repro.launch.mesh import make_local_mesh
+    m = make_local_mesh()
+    assert shd.dp_axes_for_batch(m, None) == ("data",)
+
+
+@pytest.mark.parametrize("arch", ["jamba_1_5_large_398b",
+                                  "llama4_scout_17b_a16e"])
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    total = sum(x.size for x in jax.tree.leaves(params))
+    if arch == "jamba_1_5_large_398b":
+        assert 380e9 < total < 420e9          # published: 398B
+        counts = matmul_param_counts(cfg, params)
+        active = total - counts["expert"] * (1 - 2 / 16)
+        assert 85e9 < active < 105e9          # published: 94B active
+    else:
+        assert 80e9 < total < 130e9           # 17B active x 16E + shared
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "decode_32k"])
+def test_analytic_estimator_sane(shape_name):
+    cfg = get_config("qwen2_1_5b")
+    params = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    est = estimate(cfg, SHAPES[shape_name], params, chips=256)
+    assert est["flops"] > 0 and est["hbm_bytes_per_device"] > 0
+    assert est["model_flops"] <= est["flops"] * 1.001
+    if shape_name == "train_4k":
+        # 6ND sanity: within 2x of the classic estimate
+        six_nd = 6 * est["matmul_active"] * est["tokens"]
+        assert 0.5 < est["matmul_flops"] / six_nd < 2.0

@@ -1,0 +1,93 @@
+"""Training loop: convergence smoke, checkpoint-resume, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.tokens import SyntheticCorpus
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import (TrainHParams, init_state, make_train_step,
+                                run_training)
+from repro.optim.compression import bf16_compress, ef_init
+from repro.optim.optimizers import (adamw_init, adamw_update,
+                                    clip_by_global_norm, cosine_schedule)
+
+
+def test_loss_decreases_over_steps():
+    cfg = get_config("qwen3_0_6b").reduced()
+    mesh = make_local_mesh()
+    hp = TrainHParams(lr=1e-3, warmup=2, total_steps=20)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    step_fn = make_train_step(cfg, mesh, hp)
+    corpus = SyntheticCorpus(cfg.vocab, 16)
+    losses = []
+    for s in range(8):
+        batch = dict(corpus.sample(s, 0, 4)._asdict())
+        state, m = step_fn(state, batch, jnp.asarray(s, jnp.int32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_run_training_checkpoint_resume(tmp_path):
+    """Driver restartability: run 4 steps w/ checkpointing, then resume —
+    the resumed run continues from the checkpointed step."""
+    cfg = get_config("qwen3_0_6b").reduced()
+    mesh = make_local_mesh()
+    hp = TrainHParams(lr=1e-3, warmup=2, total_steps=10)
+    seen = []
+    run_training(cfg, mesh, hp, global_batch=2, seq_len=16, steps=4,
+                 ckpt_dir=str(tmp_path), ckpt_every=2,
+                 on_metrics=lambda s, m: seen.append(s), log_every=1)
+    # "crash" and resume: starts at the checkpointed step 4 and runs to 6
+    seen2 = []
+    run_training(cfg, mesh, hp, global_batch=2, seq_len=16, steps=6,
+                 ckpt_dir=str(tmp_path), ckpt_every=2,
+                 on_metrics=lambda s, m: seen2.append(s), log_every=1)
+    assert seen2[0] >= 4
+
+
+def test_adamw_moves_params_toward_lower_loss():
+    params = {"w": jnp.asarray([2.0, -3.0], jnp.float32)}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for s in range(60):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params,
+                                     lr=jnp.asarray(0.1),
+                                     weight_decay=0.0)
+    assert float(loss(params)) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0,
+                                                                 rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-3)
+
+
+def test_bf16_compression_error_feedback_converges():
+    """Error feedback: the accumulated compression error stays bounded and
+    the mean compressed gradient tracks the true gradient."""
+    g = {"w": jnp.full((1000,), 0.001, jnp.float32)}  # below bf16 grid step?
+    ef = ef_init(g)
+    total = jnp.zeros((1000,))
+    for _ in range(50):
+        comp, ef = bf16_compress(g, ef)
+        total = total + comp["w"].astype(jnp.float32)
+    mean = total / 50
+    np.testing.assert_allclose(np.asarray(mean), 0.001, rtol=1e-2)
+    assert float(jnp.abs(ef.residual["w"]).max()) < 0.001
