@@ -1,0 +1,81 @@
+"""Dense vs bucket query-engine comparison (DESIGN.md §5/§8).
+
+Benchmarks *candidate generation* — the part the bucket store accelerates —
+at the paper's short-code protocol (L=16, m=32) on a long-tailed 100k-item
+dataset, plus the L=32 arm where the directory approaches the item count
+(the documented break-even). Both engines emit identical candidate sets
+(engine parity), so recall at fixed ``num_probe`` is fixed by construction
+and the comparison isolates throughput.
+
+Also writes ``BENCH_<n>.json`` at the repo root (next free number) so the
+perf trajectory is recorded per PR; ``benchmarks/perf_compare.py
+--engines`` renders the recorded files.
+"""
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, fmt, time_call
+from repro.core import range_lsh, topk
+from repro.core.bucket_index import build_bucket_index
+from repro.core.engine import QueryEngine
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+N, D, Q, K, P = 100_000, 32, 64, 10, 2000
+ARMS = [(16, 32), (32, 64)]          # (code_len, num_ranges) per fig2
+
+
+def next_bench_path() -> str:
+    n = 1
+    while os.path.exists(os.path.join(ROOT, f"BENCH_{n:04d}.json")):
+        n += 1
+    return os.path.join(ROOT, f"BENCH_{n:04d}.json")
+
+
+def bench_arm(ds, L: int, m: int) -> dict:
+    idx = range_lsh.build(ds.items, jax.random.PRNGKey(1), L, m)
+    buckets = build_bucket_index(idx)
+    _, truth = topk.exact_mips(ds.queries, ds.items, K)
+    record = {"code_len": L, "num_ranges": m, "hash_bits": idx.hash_bits,
+              "num_buckets": int(buckets.num_buckets)}
+    for name in ("dense", "bucket"):
+        eng = QueryEngine(idx, engine=name, buckets=buckets)
+        cand_fn = jax.jit(lambda q, e=eng: e.candidates(q, P))
+        us = time_call(lambda: cand_fn(ds.queries), warmup=1, iters=3)
+        _, ids = topk.rerank(ds.queries, ds.items, cand_fn(ds.queries), K)
+        rec = float(topk.recall_at(ids, truth))
+        qps = Q / (us / 1e6)
+        record[name] = {"candgen_us_per_batch": round(us, 1),
+                        "qps": round(qps, 1),
+                        f"recall@{K}": round(rec, 4)}
+        emit(f"engine_{name}_L{L}", us,
+             f"qps={fmt(qps, 1)}|r@{K}={fmt(rec)}"
+             f"|B={buckets.num_buckets}|N={N}")
+    record["candgen_speedup"] = round(
+        record["dense"]["candgen_us_per_batch"]
+        / record["bucket"]["candgen_us_per_batch"], 2)
+    emit(f"engine_speedup_L{L}", 0.0,
+         f"bucket_over_dense={fmt(record['candgen_speedup'], 2)}")
+    return record
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, d=D,
+                      num_queries=Q)
+    out = {"bench": "engine_compare", "n_items": N, "dim": D,
+           "num_queries": Q, "num_probe": P, "k": K,
+           "backend": jax.default_backend(), "arms": []}
+    for L, m in ARMS:
+        out["arms"].append(bench_arm(ds, L, m))
+    path = next_bench_path()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    emit("engine_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -52,12 +52,38 @@ def main() -> None:
          f"AI={fmt(flops / bytes_, 1)}|tpu_us={fmt(tpu_t * 1e6, 1)}"
          f"|bound={'compute' if flops / PEAK_FLOPS > bytes_ / HBM_BW else 'memory'}")
 
+    # bucket-engine kernels: directory match (B << N) + segmented gather
+    B, S, P = 20000, 1024, 1024
+    bc = jax.random.bits(jax.random.PRNGKey(5), (B, W), jnp.uint32)
+    us = time_call(lambda: ops.bucket_match(qc, bc, L))
+    ops_ = Q * B * W * 3
+    bytes_ = (Q * W + B * W) * 4 + Q * B * 4
+    tpu_t = max(ops_ / PEAK_FLOPS, bytes_ / HBM_BW)
+    emit("kernel_bucket_match", us,
+         f"AI={fmt(ops_ / bytes_, 2)}|tpu_us={fmt(tpu_t * 1e6, 1)}"
+         f"|bound=memory|vs_dense_scan={fmt(N / B, 1)}x_fewer_rows")
+    sizes = jnp.maximum(1, jax.random.randint(
+        jax.random.PRNGKey(6), (Q, S), 1, 8)).astype(jnp.int32)
+    cum = jnp.concatenate([jnp.zeros((Q, 1), jnp.int32),
+                           jnp.cumsum(sizes, axis=1)], axis=1)
+    starts = jax.random.randint(jax.random.PRNGKey(7), (Q, S), 0,
+                                N).astype(jnp.int32)
+    us = time_call(lambda: ops.bucket_gather(cum, starts, P))
+    ops_ = Q * S * P              # membership-mask accumulate
+    bytes_ = Q * (2 * S + P) * 4
+    tpu_t = max(ops_ / PEAK_FLOPS, bytes_ / HBM_BW)
+    emit("kernel_bucket_gather", us,
+         f"AI={fmt(ops_ / bytes_, 1)}|tpu_us={fmt(tpu_t * 1e6, 1)}|bound=compute")
+
     # Pallas interpret-mode correctness spot check (tiny shape)
     xs, As = x[:256, :64], A[:64, :32]
     o1 = ops.hash_encode(xs, As, tail[:256], at[:32], impl="pallas")
     o2 = ops.hash_encode(xs, As, tail[:256], at[:32], impl="ref")
+    b1 = ops.bucket_match(qc[:16], bc[:128], L, impl="pallas")
+    b2 = ops.bucket_match(qc[:16], bc[:128], L, impl="ref")
     emit("kernel_pallas_spotcheck", 0.0,
-         f"encode_match={bool((o1 == o2).all())}")
+         f"encode_match={bool((o1 == o2).all())}"
+         f"|bucket_match={bool((b1 == b2).all())}")
 
 
 if __name__ == "__main__":

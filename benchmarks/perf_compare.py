@@ -3,6 +3,11 @@
 Usage: PYTHONPATH=src python -m benchmarks.perf_compare [--mesh pod]
 Reads experiments/dryrun_baseline/ and experiments/dryrun/ and prints the
 per-cell dominant-term comparison for EXPERIMENTS.md §Perf.
+
+``--engines`` instead renders the dense-vs-bucket query-engine records
+(BENCH_<n>.json at the repo root, written by benchmarks/engine_bench.py):
+candidate-generation QPS, recall at the shared probe budget, and the
+bucket-over-dense speedup per code-length arm.
 """
 
 import argparse
@@ -13,6 +18,7 @@ import os
 HERE = os.path.dirname(__file__)
 BASE = os.path.join(HERE, "..", "experiments", "dryrun_baseline")
 OPT = os.path.join(HERE, "..", "experiments", "dryrun")
+ROOT = os.path.join(HERE, "..")
 
 
 def load(d, mesh):
@@ -32,10 +38,39 @@ def fmt_s(x):
     return f"{x * 1e6:.0f}us"
 
 
+def engines_table():
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    records = []
+    for p in paths:
+        r = json.load(open(p))
+        if r.get("bench") == "engine_compare":
+            records.append((os.path.basename(p), r))
+    if not records:
+        print("no engine_compare BENCH_*.json found "
+              "(run: python -m benchmarks.run --only engine)")
+        return
+    print("| bench | L | N | B | dense qps | bucket qps | recall@k "
+          "(both) | candgen speedup |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name, r in records:
+        for arm in r["arms"]:
+            k = f"recall@{r['k']}"
+            print(f"| {name} | {arm['code_len']} | {r['n_items']} "
+                  f"| {arm['num_buckets']} "
+                  f"| {arm['dense']['qps']} | {arm['bucket']['qps']} "
+                  f"| {arm['dense'][k]} / {arm['bucket'][k]} "
+                  f"| {arm['candgen_speedup']}x |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--engines", action="store_true",
+                    help="render dense-vs-bucket BENCH_*.json records")
     args = ap.parse_args()
+    if args.engines:
+        engines_table()
+        return
     base = load(BASE, args.mesh)
     opt = load(OPT, args.mesh)
     print("| arch | shape | baseline dominant | optimized dominant | "

@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig_multitable",
     "benchmarks.theory_rho",
     "benchmarks.kernel_bench",
+    "benchmarks.engine_bench",
     "benchmarks.lsh_decode",
 ]
 

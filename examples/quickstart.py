@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import range_lsh, simple_lsh, topk
+from repro.core.bucket_index import build_bucket_index
 from repro.data.synthetic import make_dataset
 
 
@@ -38,6 +39,15 @@ def main() -> None:
     _, ids_s = simple_lsh.query(si, ds.queries, k=10, num_probe=400)
     print(f"SIMPLE-LSH same budget:           "
           f"{float(topk.recall_at(ids_s, truth)):.3f}")
+
+    # bucket engine: same Algorithm-2 order through the CSR bucket store —
+    # scans the B-bucket directory instead of all N items (DESIGN.md §5)
+    buckets = build_bucket_index(idx)
+    _, ids_b = range_lsh.query(idx, ds.queries, k=10, num_probe=400,
+                               engine="bucket", buckets=buckets)
+    print(f"bucket engine ({buckets.num_buckets} buckets for "
+          f"{ds.items.shape[0]} items): recall "
+          f"{float(topk.recall_at(ids_b, truth)):.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,141 @@
+"""Bucket-store index: the paper's hash-table structure, CSR-realized
+(DESIGN.md §5).
+
+The dense query path scores every item; the paper's Algorithm 2 instead
+walks *buckets* — groups of items sharing a ``(range_id, code)`` key — in
+the eq.-12 order given by the sorted ``(U_j, l)`` ProbeTable, visiting only
+as many buckets as the probe budget needs. This module materializes that
+structure once per index:
+
+  * items are sorted by ``(range_id, packed code, item id)``; ``item_ids``
+    maps a CSR position back to the original item id;
+  * ``bucket_start`` is the (B+1,) CSR offset array — bucket ``b`` owns CSR
+    positions ``[bucket_start[b], bucket_start[b+1])``;
+  * the bucket *directory* ``(bucket_rid, bucket_code)`` carries one row
+    per occupied bucket — the only thing queries scan;
+  * ``rank`` is the (m, L+1) inverse of the ProbeTable: ``rank[j, l]`` is
+    the position of the ``(j, l)`` entry in eq.-12 order, so per-bucket
+    probe priority is one integer gather instead of a float cosine.
+
+Canonical probe order (the engine contract, see core/engine.py): items are
+probed by ascending ``(rank[j, l], csr position)``. Within a bucket all
+items share a rank, and tied buckets resolve by their directory (= CSR)
+order — both query engines implement exactly this order, which is what
+makes the dense/bucket parity test exact.
+
+The build runs on host (numpy): it is a one-time, data-dependent
+restructuring (like ``bucket_stats``), and the variable bucket count B is
+baked into the array shapes so everything downstream stays jit-static.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probe import DEFAULT_EPS, probe_table
+
+
+class BucketIndex(NamedTuple):
+    """CSR bucket store over any packed-code index.
+
+    Attributes:
+      item_ids:     (N,)   int32  — original item id at each CSR position.
+      bucket_start: (B+1,) int32  — CSR offsets per bucket.
+      bucket_rid:   (B,)   int32  — range id of each bucket.
+      bucket_code:  (B, W) uint32 — packed code of each bucket.
+      rank:         (m, L+1) int32 — eq.-12 rank of each (j, l) pair
+                    (0 = probed first; U_j enters through this table, so
+                    queries never touch the norms themselves).
+      hash_bits:    int   — L (sign-projection bits in the code).
+      eps:          float — eq.-12 slack.
+    """
+
+    item_ids: jax.Array
+    bucket_start: jax.Array
+    bucket_rid: jax.Array
+    bucket_code: jax.Array
+    rank: jax.Array
+    hash_bits: int
+    eps: float
+
+    @property
+    def num_buckets(self) -> int:
+        return self.bucket_rid.shape[0]
+
+    @property
+    def num_items(self) -> int:
+        return self.item_ids.shape[0]
+
+    @property
+    def num_ranges(self) -> int:
+        return self.rank.shape[0]
+
+
+def rank_table(upper: jax.Array, hash_bits: int,
+               eps: float = DEFAULT_EPS) -> jax.Array:
+    """(m, L+1) int32 position of each ``(j, l)`` pair in the ProbeTable's
+    eq.-12 order — the table's inverse permutation."""
+    tab = probe_table(upper, hash_bits, eps)
+    m = upper.shape[0]
+    n = m * (hash_bits + 1)
+    flat = jnp.zeros((n,), jnp.int32).at[
+        tab.range_idx * (hash_bits + 1) + tab.match_cnt].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return flat.reshape(m, hash_bits + 1)
+
+
+def build_buckets(codes: jax.Array, range_id: jax.Array, upper: jax.Array,
+                  hash_bits: int, eps: float = DEFAULT_EPS) -> BucketIndex:
+    """Assemble the CSR store from raw index arrays (host-side)."""
+    c = np.asarray(jax.device_get(codes))
+    rid = np.asarray(jax.device_get(range_id)).astype(np.int64)
+    n, w = c.shape
+    # lexicographic sort by (range_id, code words, item id) — np.lexsort is
+    # stable, so equal keys keep ascending item id.
+    keys = [c[:, j].astype(np.int64) for j in range(w - 1, -1, -1)] + [rid]
+    order = np.lexsort(tuple(keys))
+    c_s = c[order]
+    rid_s = rid[order]
+    new = np.ones((n,), bool)
+    if n > 1:
+        new[1:] = (rid_s[1:] != rid_s[:-1]) | np.any(
+            c_s[1:] != c_s[:-1], axis=1)
+    first = np.flatnonzero(new)
+    bucket_start = np.concatenate([first, [n]]).astype(np.int32)
+    return BucketIndex(
+        item_ids=jnp.asarray(order.astype(np.int32)),
+        bucket_start=jnp.asarray(bucket_start),
+        bucket_rid=jnp.asarray(rid_s[first].astype(np.int32)),
+        bucket_code=jnp.asarray(c_s[first]),
+        rank=rank_table(jnp.asarray(upper), hash_bits, eps),
+        hash_bits=hash_bits,
+        eps=eps,
+    )
+
+
+def build_bucket_index(index) -> BucketIndex:
+    """Build the bucket store from any supported index.
+
+    Accepts ``RangeLSHIndex`` / ``VocabIndex`` (have ``range_id``/``upper``/
+    ``hash_bits``/``eps``) or ``SimpleLSHIndex`` (single range with the
+    global max norm U; eq. 12 with m=1 degenerates to Hamming order).
+    """
+    if hasattr(index, "range_id"):
+        # raw per-range upper, matching probe.item_scores (empty ranges are
+        # never referenced by a bucket, so their phantom table entries are
+        # inert).
+        return build_buckets(index.codes, index.range_id, index.upper,
+                             index.hash_bits, index.eps)
+    rid = jnp.zeros((index.codes.shape[0],), jnp.int32)
+    upper = jnp.asarray(index.U).reshape(1)
+    return build_buckets(index.codes, rid, upper, index.code_len,
+                         DEFAULT_EPS)
+
+
+def bucket_sizes(bidx: BucketIndex) -> jax.Array:
+    """(B,) int32 item count per bucket."""
+    return bidx.bucket_start[1:] - bidx.bucket_start[:-1]

@@ -25,6 +25,8 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hashing
@@ -184,7 +186,7 @@ def query(index: ShardedRangeLSH, queries: jax.Array, k: int,
     spec_row = P(axis)
     q_spec = P(query_axis) if query_axis else P()
     q_spec2 = P(query_axis, None) if query_axis else P(None, None)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(q_spec2, q_spec2, P(axis, None), P(axis, None),
                   spec_row, spec_row, spec_row, P()),

@@ -1,0 +1,148 @@
+"""Unified query engine: dense-scan and bucket-traversal candidate
+generation behind one front-end (DESIGN.md §5).
+
+Both engines realize Algorithm 2's probe order — the eq.-12 ranking of
+``(range, match count)`` pairs — but with different cost shapes:
+
+  * ``engine="dense"`` — one packed Hamming scan over all N items, per-item
+    rank lookup, O(N log N) stable argsort. Best for small N or when the
+    bucket directory is nearly as large as the item table.
+  * ``engine="bucket"`` — scan only the B-entry bucket directory
+    (core/bucket_index.py), sort B bucket ranks, and gather the first
+    ``num_probe`` items by walking the probe-ordered bucket runs
+    (kernels/bucket_probe.py). Work is O(B log B + num_probe) per query —
+    sublinear in N whenever buckets collide (the paper's short-code
+    regime), which is where the proven query complexity comes from.
+
+Canonical candidate order (shared by both engines): ascending
+``(rank[j, l], CSR position)``. All items in a bucket share a rank; the
+CSR position — items sorted by (range_id, code, id) — breaks every tie
+deterministically, so for a fixed ``(index, queries, num_probe)`` the two
+engines return *identical* candidate id sequences (tested).
+
+``QueryEngine`` wraps an index (RangeLSH / SimpleLSH / VocabIndex) plus an
+optional prebuilt :class:`BucketIndex`, exposes batched ``candidates`` /
+``query``, and is what ``range_lsh.query`` / ``simple_lsh.query`` and the
+LSH-decode serving head dispatch through.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.bucket_index import BucketIndex, build_bucket_index
+from repro.core.topk import rerank
+from repro.kernels import ops
+
+ENGINES = ("auto", "dense", "bucket")
+
+
+def encode_queries(index, queries: jax.Array, *,
+                   impl: str = "auto") -> jax.Array:
+    """Hash queries with ``P(q) = [q; 0]`` against the index's projections.
+
+    Identical for every supported index type (they all share the
+    ``(d+1, L)`` projection layout with the augmentation row last).
+    """
+    q = hashing.normalize(queries.astype(jnp.float32))
+    zeros = jnp.zeros((q.shape[0],), q.dtype)
+    return ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
+
+
+def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
+                      num_probe: int, *, impl: str = "auto") -> jax.Array:
+    """(Q, num_probe) candidate item ids via bucket traversal.
+
+    Directory match -> per-bucket eq.-12 rank -> stable sort of B ranks ->
+    segmented gather of the first ``num_probe`` items. ``num_probe`` must
+    not exceed the item count.
+    """
+    num_probe = int(num_probe)
+    assert num_probe <= buckets.num_items
+    matches = ops.bucket_match(q_codes, buckets.bucket_code,
+                               buckets.hash_bits, impl=impl)     # (Q, B)
+    bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
+    order = jnp.argsort(bucket_rank, axis=-1, stable=True)       # (Q, B)
+    # every bucket holds >= 1 item, so the first min(B, P) buckets cover
+    # the budget.
+    sel = order[:, :min(buckets.num_buckets, num_probe)]         # (Q, S)
+    sizes = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[sel]
+    starts = buckets.bucket_start[:-1][sel]
+    cum = jnp.concatenate(
+        [jnp.zeros((sel.shape[0], 1), jnp.int32),
+         jnp.cumsum(sizes, axis=-1, dtype=jnp.int32)], axis=-1)  # (Q, S+1)
+    csr_pos = ops.bucket_gather(cum, starts, num_probe, impl=impl)
+    return buckets.item_ids[csr_pos]
+
+
+def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
+                     db_codes: jax.Array, range_id: jax.Array,
+                     num_probe: int, *, impl: str = "auto") -> jax.Array:
+    """(Q, num_probe) candidate ids via the dense scan, in the same
+    canonical ``(rank, CSR position)`` order as :func:`bucket_candidates`.
+
+    Scores every item (O(Q N) match + O(N log N) sort); the bucket store is
+    used only for the rank table and the CSR tie-break layout.
+    """
+    num_probe = int(num_probe)
+    matches = ops.bucket_match(q_codes, db_codes, buckets.hash_bits,
+                               impl=impl)                        # (Q, N)
+    item_rank = buckets.rank[range_id[None, :], matches]
+    # reorder columns to CSR so the stable argsort ties on CSR position
+    rank_csr = item_rank[:, buckets.item_ids]
+    order = jnp.argsort(rank_csr, axis=-1, stable=True)
+    return buckets.item_ids[order[:, :num_probe]]
+
+
+class QueryEngine:
+    """Batched candidate generation + exact re-rank over one index.
+
+    Args:
+      index:   RangeLSHIndex / SimpleLSHIndex / VocabIndex.
+      engine:  "dense" | "bucket" | "auto" (= bucket). Both engines need
+               the store (dense uses its rank table + CSR tie-break
+               layout), so construction always has one.
+      buckets: optional prebuilt BucketIndex; when None, one is built
+               here — a host-side O(N log N) one-time cost, so reuse the
+               engine (or pass ``buckets``) across query batches.
+      impl:    kernel dispatch ("auto" | "pallas" | "ref").
+    """
+
+    def __init__(self, index, *, engine: str = "auto",
+                 buckets: Optional[BucketIndex] = None, impl: str = "auto"):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine: {engine!r}")
+        if buckets is None:
+            buckets = build_bucket_index(index)
+        if engine == "auto":
+            engine = "bucket"
+        self.index = index
+        self.engine = engine
+        self.buckets = buckets
+        self.impl = impl
+
+    @property
+    def _range_id(self) -> jax.Array:
+        if hasattr(self.index, "range_id"):
+            return self.index.range_id
+        return jnp.zeros((self.index.codes.shape[0],), jnp.int32)
+
+    def candidates(self, queries: jax.Array, num_probe: int) -> jax.Array:
+        """(Q, num_probe) item ids in canonical eq.-12 probe order."""
+        q_codes = encode_queries(self.index, queries, impl=self.impl)
+        if self.engine == "bucket":
+            return bucket_candidates(self.buckets, q_codes, num_probe,
+                                     impl=self.impl)
+        return dense_candidates(self.buckets, q_codes, self.index.codes,
+                                self._range_id, num_probe, impl=self.impl)
+
+    def query(self, queries: jax.Array, k: int, num_probe: int
+              ) -> Tuple[jax.Array, jax.Array]:
+        """Algorithm 2 end-to-end: probe ``num_probe`` items, exact
+        re-rank, return (vals, ids) (Q, k)."""
+        cand = self.candidates(queries, num_probe)
+        return rerank(queries, self.index.items, cand, k)

@@ -43,12 +43,10 @@ class Partition(NamedTuple):
 
 
 def _range_stats(norms: jax.Array, range_id: jax.Array, m: int) -> Partition:
-    ones = jnp.ones_like(norms)
     counts = jnp.zeros((m,), jnp.int32).at[range_id].add(1)
     upper = jnp.zeros((m,), norms.dtype).at[range_id].max(norms)
     big = jnp.full((m,), jnp.inf, norms.dtype).at[range_id].min(norms)
     lower = jnp.where(jnp.isfinite(big), big, 0.0)
-    del ones
     return Partition(range_id.astype(jnp.int32), upper, lower, counts)
 
 

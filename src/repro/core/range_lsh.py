@@ -120,12 +120,23 @@ def probe_order(index: RangeLSHIndex, queries: jax.Array, *,
 
 
 def query(index: RangeLSHIndex, queries: jax.Array, k: int, num_probe: int,
-          *, impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
-    """Algorithm 2 (dense form): probe ``num_probe`` items across all
-    sub-datasets in eq.-12 order, exact re-rank, global top-k."""
-    order = probe_order(index, queries, impl=impl)
-    cand = order[:, :num_probe]
-    return rerank(queries, index.items, cand, k)
+          *, impl: str = "auto", engine: str = "dense",
+          buckets=None) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 2: probe ``num_probe`` items across all sub-datasets in
+    eq.-12 order, exact re-rank, global top-k.
+
+    ``engine="dense"`` (default) keeps the flat scan + argsort; any other
+    selection dispatches through :class:`repro.core.engine.QueryEngine`
+    (pass a prebuilt ``buckets`` store to amortize construction across
+    calls — also accepted with ``engine="dense"`` for the canonical
+    CSR-tie-break dense arm)."""
+    if engine == "dense" and buckets is None:
+        order = probe_order(index, queries, impl=impl)
+        cand = order[:, :num_probe]
+        return rerank(queries, index.items, cand, k)
+    from repro.core.engine import QueryEngine
+    eng = QueryEngine(index, engine=engine, buckets=buckets, impl=impl)
+    return eng.query(queries, k, num_probe)
 
 
 def sorted_probe_table(index: RangeLSHIndex):

@@ -80,12 +80,20 @@ def probe_order(index: SimpleLSHIndex, queries: jax.Array, *,
 
 
 def query(index: SimpleLSHIndex, queries: jax.Array, k: int,
-          num_probe: int, *, impl: str = "auto"
-          ) -> Tuple[jax.Array, jax.Array]:
-    """Top-k approximate MIPS: probe ``num_probe`` items, exact re-rank."""
-    order = probe_order(index, queries, impl=impl)
-    cand = order[:, :num_probe]
-    return rerank(queries, index.items, cand, k)
+          num_probe: int, *, impl: str = "auto", engine: str = "dense",
+          buckets=None) -> Tuple[jax.Array, jax.Array]:
+    """Top-k approximate MIPS: probe ``num_probe`` items, exact re-rank.
+
+    ``engine``/``buckets`` select the candidate-generation engine exactly
+    as in :func:`repro.core.range_lsh.query` (SIMPLE-LSH is the m=1 special
+    case: eq.-12 rank order degenerates to Hamming order)."""
+    if engine == "dense" and buckets is None:
+        order = probe_order(index, queries, impl=impl)
+        cand = order[:, :num_probe]
+        return rerank(queries, index.items, cand, k)
+    from repro.core.engine import QueryEngine
+    eng = QueryEngine(index, engine=engine, buckets=buckets, impl=impl)
+    return eng.query(queries, k, num_probe)
 
 
 def bucket_stats(index: SimpleLSHIndex) -> Tuple[int, int]:

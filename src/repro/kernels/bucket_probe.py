@@ -1,0 +1,124 @@
+"""Pallas TPU kernels for the bucket-store query engine (DESIGN.md §5).
+
+The bucketed realization of Algorithm 2 replaces the dense (Q, N) Hamming
+scan + O(N log N) argsort with work proportional to the *bucket directory*
+(B = #occupied (range_id, code) buckets, B <= N and typically B << N for the
+paper's short codes):
+
+  * :func:`bucket_match_pallas` — XOR + popcount the query codes against the
+    (B, W) bucket directory and emit *match counts* ``l = hash_bits - ham``
+    (the quantity eq. 12 consumes). Same VPU tiling as the dense Hamming
+    kernel, just over the directory instead of the item table.
+  * :func:`bucket_gather_pallas` — the segmented candidate gather: given the
+    per-query probe-ordered bucket runs as CSR (cum, starts) arrays, compute
+    for every output slot ``p`` the CSR position of the p-th probed item.
+    This is the ragged "walk buckets until the budget is met" loop expressed
+    as a dense VPU computation: one pass over the selected buckets with a
+    (BQ, P) membership mask per bucket — O(S * P) VPU ops per query block,
+    no dynamic gathers inside the kernel (the final ``item_ids[csr_pos]``
+    lookup is one XLA take outside).
+
+TPU mapping (DESIGN.md §7): match = (BQ, BB, W) XOR/popcount tile in VMEM;
+gather = int32 (BQ, P) accumulator updated by a fori_loop over the S
+selected buckets (S <= num_probe, both static).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _match_kernel(q_ref, db_ref, out_ref, *, hash_bits: int):
+    q = q_ref[...]                     # (BQ, W) uint32
+    db = db_ref[...]                   # (BB, W) uint32
+    x = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+    pop = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = hash_bits - jnp.sum(pop, axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("hash_bits", "bq", "bb", "interpret"))
+def bucket_match_pallas(q_codes: jax.Array, bucket_codes: jax.Array, *,
+                        hash_bits: int, bq: int = 64, bb: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Match counts of queries against the bucket directory.
+
+    Args:
+      q_codes:      (Q, W) uint32, Q % bq == 0.
+      bucket_codes: (B, W) uint32, B % bb == 0.
+
+    Returns: (Q, B) int32 — ``hash_bits - hamming`` per (query, bucket).
+    """
+    Q, W = q_codes.shape
+    B, W2 = bucket_codes.shape
+    assert W == W2 and Q % bq == 0 and B % bb == 0
+    grid = (Q // bq, B // bb)
+    return pl.pallas_call(
+        functools.partial(_match_kernel, hash_bits=hash_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, B), jnp.int32),
+        interpret=interpret,
+    )(q_codes, bucket_codes)
+
+
+def _gather_kernel(cum_ref, starts_ref, out_ref, *, num_sel: int):
+    """out[q, p] = starts[q, j] + (p - cum[q, j]) with j s.t.
+    cum[q, j] <= p < cum[q, j+1] — the CSR position of probed item p."""
+    cum = cum_ref[...]                                     # (BQ, S+1)
+    starts = starts_ref[...]                               # (BQ, S)
+    bqn, P = out_ref.shape
+    p = jax.lax.broadcasted_iota(jnp.int32, (bqn, P), 1)
+
+    def body(i, base):
+        lo = jax.lax.dynamic_slice_in_dim(cum, i, 1, axis=1)       # (BQ, 1)
+        hi = jax.lax.dynamic_slice_in_dim(cum, i + 1, 1, axis=1)
+        st = jax.lax.dynamic_slice_in_dim(starts, i, 1, axis=1)
+        inb = jnp.logical_and(p >= lo, p < hi)
+        return base + jnp.where(inb, st - lo, 0)
+
+    base = jax.lax.fori_loop(
+        0, num_sel, body, jnp.zeros((bqn, P), jnp.int32))
+    out_ref[...] = base + p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_probe", "bq", "interpret"))
+def bucket_gather_pallas(cum: jax.Array, starts: jax.Array,
+                         num_probe: int, *, bq: int = 8,
+                         interpret: bool = False) -> jax.Array:
+    """Segmented candidate gather: CSR positions of the first ``num_probe``
+    probed items per query.
+
+    Args:
+      cum:    (Q, S+1) int32 — exclusive prefix sizes of the per-query
+              probe-ordered selected buckets (cum[:, 0] == 0). The selected
+              buckets must cover >= num_probe items (guaranteed when
+              S = min(B, num_probe): every bucket holds >= 1 item).
+      starts: (Q, S) int32 — CSR start offset of each selected bucket.
+
+    Returns: (Q, num_probe) int32 CSR positions.
+    """
+    Q, S1 = cum.shape
+    S = S1 - 1
+    assert starts.shape == (Q, S) and Q % bq == 0
+    grid = (Q // bq,)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, num_sel=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, S + 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, S), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, num_probe), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, num_probe), jnp.int32),
+        interpret=interpret,
+    )(cum, starts)

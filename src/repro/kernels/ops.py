@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.bucket_probe import (bucket_gather_pallas,
+                                        bucket_match_pallas)
 from repro.kernels.hamming import hamming_pallas
 from repro.kernels.hash_encode import hash_encode_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
@@ -117,7 +119,45 @@ def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
         ip = ip.at[N:, -1].set(-1e30)
     vals, ids = mips_topk_pallas(qp, ip, k, bq=bq, bn=bn,
                                  interpret=not _on_tpu())
-    vals, ids = vals[:Q], ids[:Q]
-    # strip the sentinel's -1e30 contribution if a padded row sneaked in
-    # (only possible when k > N, which is disallowed).
-    return vals, ids
+    return vals[:Q], ids[:Q]
+
+
+def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
+                 hash_bits: int, *, impl: str = "auto") -> jax.Array:
+    """Bucket-directory match counts: (Q, W) x (B, W) -> (Q, B) int32
+    ``l = hash_bits - hamming`` (the eq.-12 input)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.bucket_match_ref(q_codes, bucket_codes, hash_bits)
+    bq, bb = 64, 512
+    Q, B = q_codes.shape[0], bucket_codes.shape[0]
+    qp = _pad_to(q_codes, 0, bq)
+    bp = _pad_to(bucket_codes, 0, bb)
+    out = bucket_match_pallas(qp, bp, hash_bits=hash_bits, bq=bq, bb=bb,
+                              interpret=not _on_tpu())
+    return out[:Q, :B]
+
+
+def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
+                  impl: str = "auto") -> jax.Array:
+    """Segmented candidate gather: CSR positions (Q, num_probe) of the
+    first ``num_probe`` probed items, given per-query probe-ordered bucket
+    runs as (cum (Q, S+1), starts (Q, S)) int32 arrays."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.bucket_gather_ref(cum, starts, num_probe)
+    bq = 8
+    Q = cum.shape[0]
+    # row padding: a single covering run [0, num_probe) keeps padded rows
+    # in-contract (runs must cover the probe budget).
+    pad = (-Q) % bq
+    if pad:
+        pcum = jnp.concatenate(
+            [jnp.zeros((pad, 1), cum.dtype),
+             jnp.full((pad, cum.shape[1] - 1), num_probe, cum.dtype)], axis=1)
+        cum = jnp.concatenate([cum, pcum], axis=0)
+        starts = jnp.concatenate(
+            [starts, jnp.zeros((pad, starts.shape[1]), starts.dtype)], axis=0)
+    out = bucket_gather_pallas(cum, starts, num_probe, bq=bq,
+                               interpret=not _on_tpu())
+    return out[:Q]

@@ -46,3 +46,29 @@ def mips_topk_ref(queries: jax.Array, items: jax.Array, k: int
     scores = queries.astype(jnp.float32) @ items.astype(jnp.float32).T
     vals, ids = jax.lax.top_k(scores, k)
     return vals, ids.astype(jnp.int32)
+
+
+def bucket_match_ref(q_codes: jax.Array, bucket_codes: jax.Array,
+                     hash_bits: int) -> jax.Array:
+    """Oracle for the bucket-directory match kernel: (Q, B) match counts
+    ``l = hash_bits - hamming``."""
+    return hash_bits - hamming_ref(q_codes, bucket_codes)
+
+
+def bucket_gather_ref(cum: jax.Array, starts: jax.Array,
+                      num_probe: int) -> jax.Array:
+    """Oracle for the segmented candidate gather: CSR position of the p-th
+    probed item per query.
+
+    ``cum``: (Q, S+1) exclusive prefix sizes of the probe-ordered selected
+    buckets; ``starts``: (Q, S) their CSR start offsets. The selected runs
+    must cover >= num_probe items. Returns (Q, num_probe) int32.
+    """
+    S = starts.shape[1]
+    p = jnp.arange(num_probe, dtype=jnp.int32)
+    # j[q, p] = #{i : cum[q, i+1] <= p} — the run containing output slot p
+    j = jax.vmap(lambda c: jnp.searchsorted(c, p, side="right"))(cum[:, 1:])
+    j = jnp.minimum(j, S - 1).astype(jnp.int32)
+    base = jnp.take_along_axis(starts, j, axis=1)
+    lo = jnp.take_along_axis(cum, j, axis=1)
+    return base + (p[None, :] - lo)

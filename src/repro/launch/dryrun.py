@@ -42,7 +42,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, get_config,
                                 shape_cells)
 from repro.data.tokens import decode_batch_specs, train_batch_specs
-from repro.launch.mesh import make_production_mesh
+from repro import compat
+from repro.launch.mesh import ambient_mesh, make_production_mesh
 from repro.models import lm
 from repro.parallel import analytic
 from repro.parallel import hlo_analysis as hlo
@@ -237,16 +238,16 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     }
     t0 = time.time()
     try:
-        # set_mesh gives with_sharding_constraint (activation anchors) an
-        # ambient mesh during tracing.
-        with jax.set_mesh(mesh):
+        # the ambient mesh gives with_sharding_constraint (activation
+        # anchors) a resource env during tracing.
+        with ambient_mesh(mesh):
             step, args = build_cell(cfg, shape_name, mesh)
             lowered = step.lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
             t2 = time.time()
 
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         try:
             mem = compiled.memory_analysis()
             mem_d = {
@@ -364,7 +365,7 @@ def run_mips_cell(mesh_kind: str, out_dir: str = OUT_DIR) -> Dict[str, Any]:
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         text = compiled.as_text()
         colls = hlo.parse_collectives(text, chips)
         csum = hlo.summarize_collectives(colls)

@@ -9,7 +9,12 @@
     full (B, V) logits — the paper's technique in the serving path.
 
 ``BatchedServer`` is a toy request loop for the examples: accumulates
-requests into a batch, prefications, then greedy-decodes.
+requests into a batch, prefills, then greedy-decodes.
+
+The LSH-decode head supports both query engines (DESIGN.md §5):
+``engine="dense"`` scans all vocab codes; ``engine="bucket"`` walks the CSR
+bucket store (built once per checkpoint, shipped to the step as extra
+replicated arrays).
 """
 
 from __future__ import annotations
@@ -41,16 +46,19 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
                      fsdp_axis: Optional[str] = None,
                      lsh_decode: bool = False, topk: int = 8,
                      num_probe: int = 1024,
-                     vocab_meta: Optional[Tuple[int, int, float]] = None
-                     ) -> Callable:
+                     vocab_meta: Optional[Tuple[int, int, float]] = None,
+                     engine: str = "dense") -> Callable:
     """Returns jitted ``fn(params, tokens, caches, pos[, vidx_arrays])``.
 
     With ``lsh_decode`` the output is (vals (B, k), ids (B, k)) — the
     RANGE-LSH head needs ``vocab_meta=(code_len, hash_bits, eps)`` (static)
     and ``vidx_arrays`` = dict(codes, range_id, upper, A) (vocab-sharded).
-    Otherwise full (B, V) logits. Cache in/out shardings pin the
-    sequence-sharded layout so XLA's partial softmax (flash-decoding)
-    kicks in.
+    ``engine="bucket"`` additionally expects the CSR bucket-store arrays
+    (item_ids, bucket_start, bucket_rid, bucket_code, rank —
+    replicated; see ``bucket_arrays``) and generates candidates by bucket
+    traversal instead of the dense vocab scan. Otherwise full (B, V)
+    logits. Cache in/out shardings pin the sequence-sharded layout so
+    XLA's partial softmax (flash-decoding) kicks in.
     """
     dp = shd.dp_axes(mesh)
 
@@ -59,15 +67,23 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
         out, new_caches = lm.decode_step(params, tokens, caches, cache_pos,
                                          cfg, logits_mode=mode)
         if lsh_decode:
+            from repro.core.bucket_index import BucketIndex
+
             unembed = (params["embed"].T if cfg.tie_embeddings
                        else params["unembed"])
             index = lm_head.VocabIndex(
                 vidx_arrays["codes"], vidx_arrays["range_id"],
                 vidx_arrays["upper"], vidx_arrays["A"],
                 vocab_meta[0], vocab_meta[1], vocab_meta[2])
+            buckets = None
+            if engine == "bucket":
+                buckets = BucketIndex(
+                    vidx_arrays["item_ids"], vidx_arrays["bucket_start"],
+                    vidx_arrays["bucket_rid"], vidx_arrays["bucket_code"],
+                    vidx_arrays["rank"], vocab_meta[1], vocab_meta[2])
             vals, ids = lm_head.lsh_topk_tokens(
                 index, out, unembed, k=topk, num_probe=num_probe,
-                final_softcap=cfg.final_softcap)
+                final_softcap=cfg.final_softcap, buckets=buckets)
             return (vals, ids), new_caches
         return out, new_caches
 
@@ -83,9 +99,13 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
                     shd.to_shardings(mesh, cspecs),
                     NamedSharding(mesh, P())]
     if lsh_decode:
-        in_shardings.append(shd.to_shardings(mesh, {
-            "codes": P(MODEL_AXIS, None), "range_id": P(MODEL_AXIS),
-            "upper": P(), "A": P(None, None)}))
+        vspecs = {"codes": P(MODEL_AXIS, None), "range_id": P(MODEL_AXIS),
+                  "upper": P(), "A": P(None, None)}
+        if engine == "bucket":   # CSR store rides along replicated
+            vspecs.update({
+                "item_ids": P(), "bucket_start": P(), "bucket_rid": P(),
+                "bucket_code": P(None, None), "rank": P(None, None)})
+        in_shardings.append(shd.to_shardings(mesh, vspecs))
     out_shardings = (None, shd.to_shardings(mesh, cspecs))
     return jax.jit(step, in_shardings=tuple(in_shardings),
                    out_shardings=out_shardings,
@@ -107,6 +127,13 @@ def make_prefill(cfg: ModelConfig, mesh: Mesh, *,
         NamedSharding(mesh, P(dp, None))))
 
 
+def bucket_arrays(buckets) -> Dict[str, jax.Array]:
+    """The CSR-store entries of the ``vidx_arrays`` dict (engine="bucket")."""
+    return dict(item_ids=buckets.item_ids, bucket_start=buckets.bucket_start,
+                bucket_rid=buckets.bucket_rid,
+                bucket_code=buckets.bucket_code, rank=buckets.rank)
+
+
 class BatchedServer:
     """Minimal batched greedy-decode loop over the jitted steps."""
 
@@ -114,7 +141,7 @@ class BatchedServer:
                  max_seq: int = 256, batch: int = 8,
                  lsh_decode: bool = False,
                  vocab_index: Optional[Any] = None,
-                 num_probe: int = 1024):
+                 num_probe: int = 1024, engine: str = "dense"):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -123,15 +150,22 @@ class BatchedServer:
         self.lsh_decode = lsh_decode
         self.vocab_index = vocab_index
         self.num_probe = num_probe
+        self.engine = engine
         meta = ((vocab_index.code_len, vocab_index.hash_bits,
                  vocab_index.eps) if lsh_decode else None)
         self._vidx_arrays = (dict(codes=vocab_index.codes,
                                   range_id=vocab_index.range_id,
                                   upper=vocab_index.upper,
                                   A=vocab_index.A) if lsh_decode else None)
+        self._buckets = None
+        if lsh_decode and engine == "bucket":
+            from repro.core.bucket_index import build_bucket_index
+            self._buckets = build_bucket_index(vocab_index)
+            self._vidx_arrays.update(bucket_arrays(self._buckets))
         self.decode_fn = make_decode_step(cfg, mesh, lsh_decode=lsh_decode,
                                           vocab_meta=meta,
-                                          num_probe=num_probe)
+                                          num_probe=num_probe,
+                                          engine=engine)
 
     def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
         """prompts: (B, S0) int32 -> generated ids (B, steps)."""
@@ -145,7 +179,8 @@ class BatchedServer:
             _, ids = lm_head.lsh_topk_tokens(
                 self.vocab_index, last_hidden, unembed, k=1,
                 num_probe=self.num_probe,
-                final_softcap=self.cfg.final_softcap)
+                final_softcap=self.cfg.final_softcap,
+                buckets=self._buckets)
             tok = ids[:, 0]
         else:
             _, ids = lm_head.exact_topk_tokens(

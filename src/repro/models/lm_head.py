@@ -26,11 +26,12 @@ global top-k — Algorithm 2 as one small collective, same shape as
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 
 from repro.core import hashing
 from repro.core.partition import effective_upper, percentile_partition
@@ -77,24 +78,36 @@ def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
                     unembed: jax.Array, *, k: int = 8, num_probe: int = 1024,
                     final_softcap: Optional[float] = None,
                     true_vocab: Optional[int] = None,
-                    impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+                    impl: str = "auto",
+                    buckets=None) -> Tuple[jax.Array, jax.Array]:
     """Approximate top-k tokens for hidden states (B, d).
 
     Returns (logit_vals (B, k) f32, token_ids (B, k) int32). Probes the
     ``num_probe`` best vocab rows by the eq.-12 score, then re-ranks them
     with exact inner products against the unembedding. ``true_vocab``
     excludes vocab-padding rows (configs/base.py padded_vocab).
+
+    ``buckets`` (a :class:`repro.core.bucket_index.BucketIndex` built over
+    the vocab codes) switches candidate generation to the bucket engine —
+    O(B log B) directory work instead of the dense (B, V) scan +
+    top_k. Padding rows may then consume probe budget (they are still
+    excluded from the final top-k by the ``true_vocab`` re-rank mask).
     """
     q = hashing.normalize(hidden.astype(jnp.float32))
     zeros = jnp.zeros((q.shape[0],), q.dtype)
     q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
-    ham = ops.hamming_scan(q_codes, index.codes, impl=impl)   # (B, V)
-    scores = item_scores(index.upper, index.range_id, ham, index.hash_bits,
-                         index.eps)
-    if true_vocab is not None and true_vocab < index.codes.shape[0]:
-        scores = jnp.where(jnp.arange(index.codes.shape[0]) < true_vocab,
-                           scores, -jnp.inf)
-    _, cand = jax.lax.top_k(scores, num_probe)                # (B, P)
+    if buckets is not None:
+        from repro.core.engine import bucket_candidates
+        cand = bucket_candidates(buckets, q_codes, num_probe, impl=impl)
+    else:
+        ham = ops.hamming_scan(q_codes, index.codes, impl=impl)   # (B, V)
+        scores = item_scores(index.upper, index.range_id, ham,
+                             index.hash_bits, index.eps)
+        if true_vocab is not None and true_vocab < index.codes.shape[0]:
+            scores = jnp.where(
+                jnp.arange(index.codes.shape[0]) < true_vocab,
+                scores, -jnp.inf)
+        _, cand = jax.lax.top_k(scores, num_probe)                # (B, P)
     cand_vecs = jnp.take(unembed, cand, axis=1)               # (d,) gather
     # unembed is (d, V): gather columns -> (d, B, P); contract d
     logits = jnp.einsum("bd,dbp->bp", hidden.astype(jnp.float32),
@@ -161,7 +174,7 @@ def sharded_lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
         bv, bp = jax.lax.top_k(fv, k)
         return bv, jnp.take_along_axis(fi, bp, axis=1)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P(), P(None, None), P(),
                   P(None, axis)),

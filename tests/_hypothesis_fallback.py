@@ -1,0 +1,80 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed here).
+
+The suite only uses ``@given`` with ``st.integers(lo, hi)`` / ``st.booleans()``
+plus the ``settings`` profile plumbing. This shim replays each property test
+over a small fixed sample grid (bounds, midpoints, and a few pseudo-random
+interior points) so the invariants still get exercised. ``conftest.py``
+installs it into ``sys.modules`` only when the real package is absent.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    rng = random.Random(lo * 1000003 + hi)
+    pts = {lo, hi, (lo + hi) // 2}
+    while len(pts) < min(5, hi - lo + 1):
+        pts.add(rng.randint(lo, hi))
+    return _Strategy(sorted(pts))
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True])
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying fn's signature would make pytest
+        # treat the strategy-filled parameters as fixtures.
+        def wrapper():
+            for combo in itertools.product(*(s.samples for s in strategies)):
+                fn(*combo)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+class settings:
+    """No-op profile registry; usable as a decorator like the real one."""
+
+    _profiles: dict = {}
+
+    def __init__(self, *a, **k):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, *a, **k):
+        cls._profiles[name] = (a, k)
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+HealthCheck: list = []
+
+
+def build_module() -> types.ModuleType:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.booleans = booleans
+    mod.strategies = st
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    return mod

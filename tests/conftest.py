@@ -1,6 +1,25 @@
+import sys
+
 import jax
 import jax.numpy as jnp
 import pytest
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess compiles)")
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # deterministic fallback grid, see _hypothesis_fallback
+    import os
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback as _hf
+
+    _mod = _hf.build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,158 @@
+"""Bucket-store subsystem: CSR invariants, kernel sweeps, engine parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import range_lsh, simple_lsh, topk
+from repro.core.bucket_index import (build_bucket_index, bucket_sizes,
+                                     rank_table)
+from repro.core.engine import QueryEngine
+from repro.core.probe import probe_table
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def range_index(longtail_ds):
+    return range_lsh.build(longtail_ds.items, jax.random.PRNGKey(1), 16, 8)
+
+
+@pytest.fixture(scope="module")
+def simple_index(longtail_ds):
+    return simple_lsh.build(longtail_ds.items, jax.random.PRNGKey(1), 16)
+
+
+def test_csr_invariants(range_index):
+    b = build_bucket_index(range_index)
+    n = range_index.items.shape[0]
+    ids = np.asarray(b.item_ids)
+    start = np.asarray(b.bucket_start)
+    # item_ids is a permutation of [0, N)
+    assert sorted(ids.tolist()) == list(range(n))
+    # offsets partition [0, N) into non-empty runs
+    assert start[0] == 0 and start[-1] == n
+    assert np.all(np.diff(start) >= 1)
+    # every item in bucket k has the bucket's (range_id, code)
+    codes = np.asarray(range_index.codes)
+    rid = np.asarray(range_index.range_id)
+    bc = np.asarray(b.bucket_code)
+    br = np.asarray(b.bucket_rid)
+    for k in (0, len(br) // 2, len(br) - 1):
+        members = ids[start[k]:start[k + 1]]
+        assert np.all(rid[members] == br[k])
+        assert np.all(codes[members] == bc[k])
+        # within a bucket, CSR keeps ascending item id (the tie-break)
+        assert np.all(np.diff(members) > 0)
+    # directory rows are unique keys in (rid, code) order
+    full = np.concatenate([br[:, None].astype(np.int64),
+                           bc.astype(np.int64)], axis=1)
+    assert np.all((full[1:] > full[:-1]).any(axis=1))
+    first_diff = np.argmax(full[1:] != full[:-1], axis=1)
+    cmp = full[np.arange(len(full) - 1), first_diff] < \
+        full[1 + np.arange(len(full) - 1), first_diff]
+    assert np.all(cmp)
+    # sizes sum to N
+    assert int(bucket_sizes(b).sum()) == n
+
+
+def test_rank_table_inverts_probe_table(range_index):
+    L = range_index.hash_bits
+    tab = probe_table(range_index.upper, L, range_index.eps)
+    rank = np.asarray(rank_table(range_index.upper, L, range_index.eps))
+    j = np.asarray(tab.range_idx)
+    l = np.asarray(tab.match_cnt)
+    # entry probed i-th has rank i
+    np.testing.assert_array_equal(rank[j, l], np.arange(len(j)))
+
+
+BUCKET_MATCH_SHAPES = [(8, 64, 1), (37, 771, 2), (64, 512, 4), (1, 100, 3)]
+
+
+@pytest.mark.parametrize("q,b,w", BUCKET_MATCH_SHAPES)
+def test_bucket_match_matches_ref(q, b, w):
+    k1, k2 = jax.random.PRNGKey(q), jax.random.PRNGKey(b)
+    qc = jax.random.bits(k1, (q, w), jnp.uint32)
+    bc = jax.random.bits(k2, (b, w), jnp.uint32)
+    got = ops.bucket_match(qc, bc, 32 * w, impl="pallas")
+    want = ref.bucket_match_ref(qc, bc, 32 * w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("q,s,p", [(4, 16, 40), (7, 65, 64), (1, 3, 5),
+                                   (16, 128, 100)])
+def test_bucket_gather_matches_ref(q, s, p):
+    rng = np.random.default_rng(q * 31 + s)
+    sizes = rng.integers(1, 7, (q, s)).astype(np.int32)
+    # ensure every query's runs cover the probe budget (the contract)
+    sizes[:, -1] += np.maximum(0, p - sizes.sum(axis=1)).astype(np.int32)
+    starts = rng.integers(0, 10_000, (q, s)).astype(np.int32)
+    cum = np.concatenate([np.zeros((q, 1), np.int32),
+                          np.cumsum(sizes, axis=1, dtype=np.int32)], axis=1)
+    got = ops.bucket_gather(jnp.asarray(cum), jnp.asarray(starts), p,
+                            impl="pallas")
+    want = ref.bucket_gather_ref(jnp.asarray(cum), jnp.asarray(starts), p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # first run starts at starts[:, 0]
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], starts[:, 0])
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("kind", ["range", "simple"])
+def test_engine_parity_dense_vs_bucket(longtail_ds, range_index,
+                                       simple_index, kind, impl):
+    """Acceptance: for fixed (index, queries, num_probe) the bucket engine
+    emits exactly the dense engine's first num_probe items in eq.-12 order,
+    stable tie-break included."""
+    index = range_index if kind == "range" else simple_index
+    buckets = build_bucket_index(index)
+    dense = QueryEngine(index, engine="dense", buckets=buckets, impl=impl)
+    bucket = QueryEngine(index, engine="bucket", buckets=buckets, impl=impl)
+    for num_probe in (32, 333, 1000):
+        cd = np.asarray(dense.candidates(longtail_ds.queries, num_probe))
+        cb = np.asarray(bucket.candidates(longtail_ds.queries, num_probe))
+        np.testing.assert_array_equal(cd, cb)
+
+
+def test_engine_query_recall_matches_dense_path(longtail_ds, range_index):
+    """End-to-end bucket query matches the legacy dense path's recall
+    (identical candidate quality; only exact-tie ordering may differ)."""
+    items, queries = longtail_ds.items, longtail_ds.queries
+    _, truth = topk.exact_mips(queries, items, 10)
+    v_legacy, i_legacy = range_lsh.query(range_index, queries, 10, 400)
+    buckets = build_bucket_index(range_index)
+    v_bucket, i_bucket = range_lsh.query(range_index, queries, 10, 400,
+                                         engine="bucket", buckets=buckets)
+    r_legacy = float(topk.recall_at(i_legacy, truth))
+    r_bucket = float(topk.recall_at(i_bucket, truth))
+    assert abs(r_legacy - r_bucket) < 0.05
+    assert v_bucket.shape == v_legacy.shape
+
+
+def test_full_probe_budget_is_exact(longtail_ds, range_index):
+    """num_probe == N covers every bucket: bucket-engine query == exact."""
+    items, queries = longtail_ds.items, longtail_ds.queries[:8]
+    n = items.shape[0]
+    ev, ei = topk.exact_mips(queries, items, 5)
+    buckets = build_bucket_index(range_index)
+    bv, bi = range_lsh.query(range_index, queries, 5, n,
+                             engine="bucket", buckets=buckets)
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(ev), atol=1e-4)
+
+
+def test_lm_head_bucket_arm_full_budget_matches_exact():
+    from repro.models import lm_head
+
+    d, V = 24, 512
+    key = jax.random.PRNGKey(0)
+    unembed = jax.random.normal(key, (d, V)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (1, V)))
+    index = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(2),
+                                      code_len=32, num_ranges=8)
+    buckets = build_bucket_index(index)
+    hidden = jax.random.normal(jax.random.PRNGKey(3), (4, d))
+    ev, ei = lm_head.exact_topk_tokens(hidden, unembed, 5)
+    bv, bi = lm_head.lsh_topk_tokens(index, hidden, unembed, k=5,
+                                     num_probe=V, buckets=buckets)
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(ev), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(ei))

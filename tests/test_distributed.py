@@ -59,9 +59,8 @@ SUBPROCESS_TEST = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import distributed, range_lsh, topk
-    from jax.sharding import AxisType
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    from repro.launch.mesh import make_compat_mesh
+    mesh = make_compat_mesh((8,), ("data",))
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2000, 24))
     norms = jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (2000,)))

@@ -85,18 +85,22 @@ def test_bucket_balance_improves(longtail_ds):
 
 
 def test_ranged_l2_alsh_beats_plain(longtail_ds):
-    """§5: partitioning helps L2-ALSH too."""
+    """§5: partitioning helps L2-ALSH too. The claim is statistical, so
+    average over hash draws (a single key can be unlucky either way)."""
     items, queries = longtail_ds.items, longtail_ds.queries
     n = items.shape[0]
     _, truth = topk.exact_mips(queries, items, 10)
     probes = [int(0.1 * n)]
-    plain = l2_alsh.build(items, jax.random.PRNGKey(5), 32)
-    ranged = l2_alsh.build_ranged(items, jax.random.PRNGKey(5), 32, 16)
-    rec_p = float(topk.probed_recall_curve(
-        l2_alsh.probe_order(plain, queries), truth, probes)[0])
-    rec_r = float(topk.probed_recall_curve(
-        l2_alsh.probe_order(ranged, queries), truth, probes)[0])
-    assert rec_r >= rec_p - 0.02
+    rec_p, rec_r = 0.0, 0.0
+    seeds = (3, 5, 7)
+    for seed in seeds:
+        plain = l2_alsh.build(items, jax.random.PRNGKey(seed), 32)
+        ranged = l2_alsh.build_ranged(items, jax.random.PRNGKey(seed), 32, 16)
+        rec_p += float(topk.probed_recall_curve(
+            l2_alsh.probe_order(plain, queries), truth, probes)[0])
+        rec_r += float(topk.probed_recall_curve(
+            l2_alsh.probe_order(ranged, queries), truth, probes)[0])
+    assert rec_r / len(seeds) >= rec_p / len(seeds) - 0.02
 
 
 def test_sorted_probe_table_consistency(longtail_ds):

@@ -67,3 +67,63 @@ def test_effective_upper_fills_empty_ranges():
     part = uniform_partition(norms, 8)     # middle bins empty
     upper = effective_upper(part)
     assert bool(jnp.all(upper > 0))
+
+
+def test_uniform_partition_empty_bins_stats():
+    """Two norm clusters at the domain ends: interior bins are empty with
+    zeroed stats, and effective_upper substitutes the global max for every
+    empty bin (so no downstream division by zero)."""
+    norms = jnp.asarray([1.0, 1.01, 1.02, 9.0, 9.01, 9.02])
+    m = 10
+    part = uniform_partition(norms, m)
+    counts = np.asarray(part.counts)
+    upper = np.asarray(part.upper)
+    lower = np.asarray(part.lower)
+    assert counts.sum() == 6
+    empty = counts == 0
+    assert empty.any() and not empty[0] and not empty[-1]
+    # empty bins report 0 for both extrema
+    assert np.all(upper[empty] == 0.0)
+    assert np.all(lower[empty] == 0.0)
+    # occupied bins keep true extrema
+    assert np.all(upper[~empty] > 0.0)
+    eff = np.asarray(effective_upper(part))
+    assert np.all(eff[empty] == np.max(norms))
+    np.testing.assert_array_equal(eff[~empty], upper[~empty])
+
+
+def test_index_bits_budget_accounting():
+    """§4 code-budget split: ceil(log2 m) bits for the sub-dataset id,
+    including m=1 (no id needed) and non-power-of-two m."""
+    from repro.core.range_lsh import index_bits
+
+    assert index_bits(1) == 0
+    assert index_bits(2) == 1
+    assert index_bits(3) == 2          # non-power-of-two rounds up
+    assert index_bits(4) == 2
+    assert index_bits(5) == 3
+    assert index_bits(31) == 5
+    assert index_bits(32) == 5
+    assert index_bits(33) == 6
+
+
+def test_charge_index_bits_budget_in_build():
+    """charge_index_bits=True spends the id bits out of code_len; False
+    gives the full budget to hashing (the ablation mode)."""
+    import jax
+
+    from repro.core import range_lsh
+
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.normal(size=(200, 16)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    for m in (1, 5, 8):                # m=1 and non-power-of-two included
+        idx = range_lsh.build(items, key, 32, m)
+        assert idx.hash_bits == 32 - range_lsh.index_bits(m)
+        assert idx.code_len == 32
+        assert idx.codes.shape == (200, (idx.hash_bits + 31) // 32)
+        free = range_lsh.build(items, key, 32, m, charge_index_bits=False)
+        assert free.hash_bits == 32
+    # budget too small for the id bits: build must refuse
+    with np.testing.assert_raises(ValueError):
+        range_lsh.build(items, key, 3, 8)   # index_bits(8)=3 => 0 hash bits

@@ -81,6 +81,27 @@ def test_batched_server_lsh_decode(small_lm):
                                   np.asarray(out_exact))
 
 
+def test_batched_server_bucket_engine(small_lm):
+    """engine="bucket" decode: full probe budget => identical greedy output
+    to the exact server (candidates cover the whole vocab)."""
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    vidx = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(5),
+                                     code_len=64, num_ranges=16)
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 lsh_decode=True, vocab_index=vidx,
+                                 num_probe=cfg.padded_vocab,
+                                 engine="bucket")
+    exact_server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out_bucket = server.generate(prompts, steps=3)
+    out_exact = exact_server.generate(prompts, steps=3)
+    np.testing.assert_array_equal(np.asarray(out_bucket),
+                                  np.asarray(out_exact))
+
+
 def test_greedy_continuation_matches_teacher_forcing(small_lm):
     """prefill -> extend_cache -> decode produces the same next token as a
     full forward pass at each step (teacher-forced prefix)."""

@@ -52,9 +52,8 @@ def test_model_axis_dims_shardable(arch):
 
 
 def test_dp_axes_for_batch():
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_compat_mesh
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
     assert shd.dp_axes_for_batch(mesh, 1) == ("data",)
     # a fake mesh-shape check via the sharding helper contract:
     # batch=1 on a 16-way axis must not be sharded
