@@ -7,10 +7,28 @@ CPU; ``derived`` carries the paper-facing quantity (recall, rho, ratio, ...).
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 from typing import Any, Callable, Dict, Iterable, List, Tuple
 
 import jax
+
+
+def bench_smoke() -> bool:
+    """CI canary mode (REPRO_BENCH_SMOKE=1): toy sizes, results written to
+    a temp dir so the repo's recorded BENCH_*.json stay full-scale."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def bench_json_path(root: str) -> str:
+    """Next free BENCH_<n>.json under ``root`` (temp dir in smoke mode)."""
+    if bench_smoke():
+        root = tempfile.mkdtemp(prefix="bench_smoke_")
+    n = 1
+    while os.path.exists(os.path.join(root, f"BENCH_{n:04d}.json")):
+        n += 1
+    return os.path.join(root, f"BENCH_{n:04d}.json")
 
 
 def time_call(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 3

@@ -17,22 +17,20 @@ import os
 
 import jax
 
-from benchmarks.common import emit, fmt, time_call
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt, \
+    time_call
 from repro.core import range_lsh, topk
 from repro.core.bucket_index import build_bucket_index
 from repro.core.engine import QueryEngine
 from repro.data.synthetic import make_dataset
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
-N, D, Q, K, P = 100_000, 32, 64, 10, 2000
-ARMS = [(16, 32), (32, 64)]          # (code_len, num_ranges) per fig2
-
-
-def next_bench_path() -> str:
-    n = 1
-    while os.path.exists(os.path.join(ROOT, f"BENCH_{n:04d}.json")):
-        n += 1
-    return os.path.join(ROOT, f"BENCH_{n:04d}.json")
+if bench_smoke():                    # CI canary: toy N, one arm
+    N, D, Q, K, P = 5_000, 32, 16, 10, 500
+    ARMS = [(16, 32)]
+else:
+    N, D, Q, K, P = 100_000, 32, 64, 10, 2000
+    ARMS = [(16, 32), (32, 64)]      # (code_len, num_ranges) per fig2
 
 
 def bench_arm(ds, L: int, m: int) -> dict:
@@ -70,7 +68,7 @@ def main() -> None:
            "backend": jax.default_backend(), "arms": []}
     for L, m in ARMS:
         out["arms"].append(bench_arm(ds, L, m))
-    path = next_bench_path()
+    path = bench_json_path(ROOT)
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

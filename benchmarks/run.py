@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.theory_rho",
     "benchmarks.kernel_bench",
     "benchmarks.engine_bench",
+    "benchmarks.streaming_bench",
     "benchmarks.lsh_decode",
 ]
 

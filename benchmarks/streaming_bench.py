@@ -1,0 +1,162 @@
+"""Streaming index service benchmark (DESIGN.md §9) — writes BENCH_<n>.json.
+
+Three arms over a long-tailed catalog:
+
+  * **sustained** — interleaved insert/delete/query traffic against one
+    mutable index: insert and delete throughput, query QPS (merged
+    base+delta engine, warm jit), compactions absorbed along the way.
+  * **compaction** — recall@10 against exact MIPS on the mutated catalog
+    immediately before and after folding the delta (parity: the merged
+    engine makes compaction a pure cost event, so the numbers must match).
+  * **repartition** — the paper's locality claim doing systems work: the
+    same bound-breaching insert handled by localized repartition (re-encode
+    + splice one range) vs the full-rebuild baseline (re-encode every
+    range), swept over m. Localized should win whenever m spreads the
+    catalog (the acceptance bar is m >= 8).
+
+``REPRO_BENCH_SMOKE=1`` shrinks everything to CI-canary size and writes
+the JSON to a temp dir.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt
+from repro import streaming
+from repro.core import topk
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+if bench_smoke():
+    N, D, Q, K, P = 2_000, 32, 16, 10, 200
+    ROUNDS, INS, DEL = 6, 32, 8
+    M_SWEEP = (8,)
+else:
+    N, D, Q, K, P = 30_000, 32, 64, 10, 1000
+    ROUNDS, INS, DEL = 30, 64, 16
+    M_SWEEP = (8, 16, 32)
+CODE_LEN, M, CAPACITY, MAX_TOMB = 16, 16, 1024, 512
+
+
+def fresh_batch(rng, n, ref_norms):
+    """Inserts with the catalog's norm profile (resampled magnitudes)."""
+    v = rng.normal(size=(n, D)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    return v * rng.choice(ref_norms, size=(n, 1))
+
+
+def live_recall(mi, queries) -> float:
+    vecs, gids = mi.live_vectors()
+    _, truth = topk.exact_mips(queries, vecs, K)
+    _, got = mi.query(queries, K, P)
+    return float(topk.recall_at(got, jnp.asarray(gids)[truth]))
+
+
+def bench_sustained(ds) -> dict:
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), CODE_LEN, M,
+                         capacity=CAPACITY, max_tombstones=MAX_TOMB)
+    rng = np.random.default_rng(0)
+    ref_norms = np.linalg.norm(np.asarray(ds.items), axis=1)
+    # warm round (compiles excluded from steady-state throughput)
+    mi.insert(fresh_batch(rng, INS, ref_norms))
+    mi.delete(np.flatnonzero(mi._live)[-DEL:].tolist())
+    jax.block_until_ready(mi.query(ds.queries, K, P))
+    t_ins = t_del = t_qry = 0.0
+    n_ins = n_del = n_qry = 0
+    for r in range(ROUNDS):
+        t0 = time.perf_counter()
+        mi.insert(fresh_batch(rng, INS, ref_norms))
+        t_ins += time.perf_counter() - t0
+        n_ins += INS
+        live_base = np.flatnonzero(mi._live)
+        victims = rng.choice(live_base, size=DEL, replace=False)
+        t0 = time.perf_counter()
+        mi.delete(victims.tolist())
+        t_del += time.perf_counter() - t0
+        n_del += DEL
+        t0 = time.perf_counter()
+        jax.block_until_ready(mi.query(ds.queries, K, P))
+        t_qry += time.perf_counter() - t0
+        n_qry += Q
+    record = {
+        "rounds": ROUNDS,
+        "inserts_per_s": round(n_ins / t_ins, 1),
+        "deletes_per_s": round(n_del / t_del, 1),
+        "query_qps": round(n_qry / t_qry, 1),
+        "compactions": mi.num_compactions,
+        "repartitions": mi.num_repartitions,
+        "final_live": mi.live_count,
+    }
+    emit("streaming_sustained", t_qry / ROUNDS * 1e6,
+         f"ins/s={fmt(record['inserts_per_s'], 1)}"
+         f"|qps={fmt(record['query_qps'], 1)}"
+         f"|compactions={mi.num_compactions}")
+    return record, mi
+
+
+def bench_compaction(mi, queries) -> dict:
+    before = live_recall(mi, queries)
+    t0 = time.perf_counter()
+    mi.compact()
+    dt = (time.perf_counter() - t0) * 1e3
+    after = live_recall(mi, queries)
+    record = {f"recall@{K}_before": round(before, 4),
+              f"recall@{K}_after": round(after, 4),
+              "compact_ms": round(dt, 1)}
+    emit("streaming_compaction", dt * 1e3,
+         f"r_before={fmt(before)}|r_after={fmt(after)}")
+    return record
+
+
+def bench_repartition(ds) -> list:
+    out = []
+    for m in M_SWEEP:
+        times = {}
+        for policy in ("localized", "full"):
+            mi = streaming.build(ds.items, jax.random.PRNGKey(1), CODE_LEN,
+                                 m, capacity=CAPACITY,
+                                 repartition_policy=policy)
+            hot = np.ones((1, D), np.float32)
+            hot /= np.linalg.norm(hot)
+            hot *= float(mi.upper.max())
+            mi.insert(2.0 * hot)   # warm event: pay one-time jit compiles
+            t0 = time.perf_counter()
+            mi.insert(4.0 * hot)   # steady-state drift event (timed)
+            times[policy] = (time.perf_counter() - t0) * 1e3
+            assert mi.num_repartitions + mi.num_full_rebuilds == 2
+        speedup = times["full"] / times["localized"]
+        out.append({"m": m,
+                    "localized_ms": round(times["localized"], 1),
+                    "full_rebuild_ms": round(times["full"], 1),
+                    "speedup": round(speedup, 2)})
+        emit(f"streaming_repartition_m{m}", times["localized"] * 1e3,
+             f"localized_over_full={fmt(speedup, 2)}")
+    return out
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, d=D,
+                      num_queries=Q)
+    record, mi = bench_sustained(ds)
+    out = {"bench": "streaming", "n_items": N, "dim": D, "num_queries": Q,
+           "num_probe": P, "k": K, "code_len": CODE_LEN, "num_ranges": M,
+           "capacity": CAPACITY, "max_tombstones": MAX_TOMB,
+           "backend": jax.default_backend(),
+           "sustained": record,
+           "compaction": bench_compaction(mi, ds.queries),
+           "repartition": bench_repartition(ds)}
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    emit("streaming_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

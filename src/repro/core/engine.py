@@ -40,6 +40,20 @@ from repro.kernels import ops
 
 ENGINES = ("auto", "dense", "bucket")
 
+# engine="auto" break-even (BENCH_0001, N=100k CPU): at L=16 the directory
+# collapses items (B/N ~ 0.33) and bucket traversal is ~3x faster; at L=32
+# nearly every bucket is a singleton (B/N ~ 0.99) and the directory scan IS
+# the dense scan plus sort overhead (dense ~1.04x faster). The ratio splits
+# the two measured arms; bucket wins exactly when the directory is
+# meaningfully smaller than the item table.
+AUTO_DENSE_RATIO = 0.75
+
+
+def select_engine(num_buckets: int, num_items: int) -> str:
+    """Resolve ``engine="auto"``: bucket traversal when the directory is
+    meaningfully smaller than the item table, dense scan otherwise."""
+    return "bucket" if num_buckets < AUTO_DENSE_RATIO * num_items else "dense"
+
 
 def encode_queries(index, queries: jax.Array, *,
                    impl: str = "auto") -> jax.Array:
@@ -103,9 +117,10 @@ class QueryEngine:
 
     Args:
       index:   RangeLSHIndex / SimpleLSHIndex / VocabIndex.
-      engine:  "dense" | "bucket" | "auto" (= bucket). Both engines need
-               the store (dense uses its rank table + CSR tie-break
-               layout), so construction always has one.
+      engine:  "dense" | "bucket" | "auto" (:func:`select_engine` picks by
+               directory size vs item count). Both engines need the store
+               (dense uses its rank table + CSR tie-break layout), so
+               construction always has one.
       buckets: optional prebuilt BucketIndex; when None, one is built
                here — a host-side O(N log N) one-time cost, so reuse the
                engine (or pass ``buckets``) across query batches.
@@ -119,7 +134,7 @@ class QueryEngine:
         if buckets is None:
             buckets = build_bucket_index(index)
         if engine == "auto":
-            engine = "bucket"
+            engine = select_engine(buckets.num_buckets, buckets.num_items)
         self.index = index
         self.engine = engine
         self.buckets = buckets

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the streaming delta-buffer scan (DESIGN.md §9).
+
+The mutable index (repro/streaming/) keeps recent inserts in a
+fixed-capacity delta buffer next to the immutable CSR bucket store. Every
+query brute-forces the delta — it is small (hundreds to a few thousand
+slots) and changes on every insert, so restructuring it per mutation would
+cost more than scanning it. The scan is the same XOR+popcount shape as the
+bucket-directory match, with one extra fused input: the per-slot liveness
+mask (unused slots and tombstoned inserts), folded into the output as a
+``-1`` sentinel so the merge step can rank dead slots last without a second
+masking pass over the (Q, C) result.
+
+TPU mapping (DESIGN.md §7): ``(BQ, BC, W)`` XOR/popcount tile in VMEM like
+:func:`repro.kernels.bucket_probe.bucket_match_pallas`; the liveness mask
+rides along as a ``(1, BC)`` int32 row broadcast over the query block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _delta_scan_kernel(q_ref, d_ref, live_ref, out_ref, *, hash_bits: int):
+    q = q_ref[...]                      # (BQ, W) uint32
+    d = d_ref[...]                      # (BC, W) uint32
+    live = live_ref[...]                # (1, BC) int32
+    x = jnp.bitwise_xor(q[:, None, :], d[None, :, :])
+    pop = jax.lax.population_count(x).astype(jnp.int32)
+    matches = hash_bits - jnp.sum(pop, axis=-1)          # (BQ, BC)
+    out_ref[...] = jnp.where(live > 0, matches, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("hash_bits", "bq", "bc", "interpret"))
+def delta_scan_pallas(q_codes: jax.Array, delta_codes: jax.Array,
+                      live: jax.Array, *, hash_bits: int, bq: int = 64,
+                      bc: int = 128, interpret: bool = False) -> jax.Array:
+    """Match counts of queries against the delta buffer, dead slots = -1.
+
+    Args:
+      q_codes:     (Q, W) uint32, Q % bq == 0.
+      delta_codes: (C, W) uint32, C % bc == 0.
+      live:        (1, C) int32 — nonzero for live slots.
+
+    Returns: (Q, C) int32 — ``hash_bits - hamming`` per (query, slot) for
+    live slots, ``-1`` for dead/unused slots.
+    """
+    Q, W = q_codes.shape
+    C, W2 = delta_codes.shape
+    assert W == W2 and Q % bq == 0 and C % bc == 0
+    assert live.shape == (1, C)
+    grid = (Q // bq, C // bc)
+    return pl.pallas_call(
+        functools.partial(_delta_scan_kernel, hash_bits=hash_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, C), jnp.int32),
+        interpret=interpret,
+    )(q_codes, delta_codes, live)

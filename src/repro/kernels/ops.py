@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.bucket_probe import (bucket_gather_pallas,
                                         bucket_match_pallas)
+from repro.kernels.delta_scan import delta_scan_pallas
 from repro.kernels.hamming import hamming_pallas
 from repro.kernels.hash_encode import hash_encode_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
@@ -136,6 +137,25 @@ def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
     out = bucket_match_pallas(qp, bp, hash_bits=hash_bits, bq=bq, bb=bb,
                               interpret=not _on_tpu())
     return out[:Q, :B]
+
+
+def delta_scan(q_codes: jax.Array, delta_codes: jax.Array, live: jax.Array,
+               hash_bits: int, *, impl: str = "auto") -> jax.Array:
+    """Delta-buffer scan: (Q, W) x (C, W) -> (Q, C) int32 match counts
+    ``l = hash_bits - hamming`` with dead slots (``live`` falsy) fused to
+    ``-1`` — the streaming merge ranks them last in one pass."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.delta_scan_ref(q_codes, delta_codes, live, hash_bits)
+    bq, bc = 64, 128
+    Q, C = q_codes.shape[0], delta_codes.shape[0]
+    qp = _pad_to(q_codes, 0, bq)
+    dp = _pad_to(delta_codes, 0, bc)
+    # padded slots carry live=0 and come back as -1; sliced off anyway.
+    lp = _pad_to(live.astype(jnp.int32)[None, :], 1, bc)
+    out = delta_scan_pallas(qp, dp, lp, hash_bits=hash_bits, bq=bq, bc=bc,
+                            interpret=not _on_tpu())
+    return out[:Q, :C]
 
 
 def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,

@@ -55,6 +55,14 @@ def bucket_match_ref(q_codes: jax.Array, bucket_codes: jax.Array,
     return hash_bits - hamming_ref(q_codes, bucket_codes)
 
 
+def delta_scan_ref(q_codes: jax.Array, delta_codes: jax.Array,
+                   live: jax.Array, hash_bits: int) -> jax.Array:
+    """Oracle for the delta-buffer scan kernel: (Q, C) match counts
+    ``l = hash_bits - hamming`` for live slots, ``-1`` for dead slots."""
+    matches = hash_bits - hamming_ref(q_codes, delta_codes)
+    return jnp.where(live[None, :].astype(jnp.int32) > 0, matches, -1)
+
+
 def bucket_gather_ref(cum: jax.Array, starts: jax.Array,
                       num_probe: int) -> jax.Array:
     """Oracle for the segmented candidate gather: CSR position of the p-th

@@ -15,6 +15,15 @@ The LSH-decode head supports both query engines (DESIGN.md §5):
 ``engine="dense"`` scans all vocab codes; ``engine="bucket"`` walks the CSR
 bucket store (built once per checkpoint, shipped to the step as extra
 replicated arrays).
+
+Live catalog updates (DESIGN.md §9): constructing the server with a
+``streaming_index`` (a :class:`repro.streaming.MutableIndex` over the
+unembedding columns) swaps the frozen LSH head for the mutable one — the
+jitted decode step returns the hidden state and the merged base+delta
+top-k runs on the serving thread, so ``insert_tokens`` / ``delete_tokens``
+take effect on the *next* decode step without recompiling the model step.
+A host-side token map carries inserted rows back to embeddable token ids
+(catalog upserts, token banning).
 """
 
 from __future__ import annotations
@@ -24,6 +33,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -47,8 +57,14 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
                      lsh_decode: bool = False, topk: int = 8,
                      num_probe: int = 1024,
                      vocab_meta: Optional[Tuple[int, int, float]] = None,
-                     engine: str = "dense") -> Callable:
+                     engine: str = "dense",
+                     return_hidden: bool = False) -> Callable:
     """Returns jitted ``fn(params, tokens, caches, pos[, vidx_arrays])``.
+
+    With ``return_hidden`` the step skips the logit head entirely and
+    returns the final hidden state (B, d) — the streaming-index serving
+    path runs its merged top-k outside the jitted step so catalog
+    mutations never recompile the model step.
 
     With ``lsh_decode`` the output is (vals (B, k), ids (B, k)) — the
     RANGE-LSH head needs ``vocab_meta=(code_len, hash_bits, eps)`` (static)
@@ -63,9 +79,11 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
     dp = shd.dp_axes(mesh)
 
     def step(params, tokens, caches, cache_pos, vidx_arrays=None):
-        mode = "none" if lsh_decode else "full"
+        mode = "none" if (lsh_decode or return_hidden) else "full"
         out, new_caches = lm.decode_step(params, tokens, caches, cache_pos,
                                          cfg, logits_mode=mode)
+        if return_hidden:
+            return out, new_caches
         if lsh_decode:
             from repro.core.bucket_index import BucketIndex
 
@@ -134,23 +152,72 @@ def bucket_arrays(buckets) -> Dict[str, jax.Array]:
                 bucket_code=buckets.bucket_code, rank=buckets.rank)
 
 
+def build_streaming_vocab_index(unembed: jax.Array, key: jax.Array, *,
+                                code_len: int = 64, num_ranges: int = 16,
+                                true_vocab: Optional[int] = None, **kw):
+    """A :class:`repro.streaming.MutableIndex` over the unembedding columns
+    (global id == token id for the initial vocabulary)."""
+    from repro import streaming
+
+    items = unembed.T.astype(jnp.float32)
+    if true_vocab is not None:
+        items = items[:true_vocab]
+    return streaming.build(items, key, code_len, num_ranges, **kw)
+
+
 class BatchedServer:
-    """Minimal batched greedy-decode loop over the jitted steps."""
+    """Minimal batched greedy-decode loop over the jitted steps.
+
+    ``streaming_index`` swaps the frozen LSH head for a mutable one and
+    enables the :meth:`insert_tokens` / :meth:`delete_tokens` endpoints —
+    catalog mutations are visible to the next decode step.
+    """
 
     def __init__(self, cfg: ModelConfig, params, mesh: Mesh, *,
                  max_seq: int = 256, batch: int = 8,
                  lsh_decode: bool = False,
                  vocab_index: Optional[Any] = None,
-                 num_probe: int = 1024, engine: str = "dense"):
+                 num_probe: int = 1024, engine: str = "dense",
+                 streaming_index: Optional[Any] = None,
+                 token_map=None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.max_seq = max_seq
         self.batch = batch
-        self.lsh_decode = lsh_decode
+        self.lsh_decode = lsh_decode and streaming_index is None
         self.vocab_index = vocab_index
         self.num_probe = num_probe
         self.engine = engine
+        self.streaming_index = streaming_index
+        if streaming_index is not None:
+            # global index id -> embeddable token id. Identity is only
+            # sound while every assigned id is a vocab row; an index that
+            # already grew past the vocabulary (pre-mount inserts, prior
+            # compactions) carries ids whose tokens are unknowable here —
+            # identity would feed out-of-range ids into the embedding
+            # lookup (silently clamped by XLA), so the caller must supply
+            # the map. Inserts through the server append their declared
+            # token.
+            total = streaming_index.store_size + streaming_index.delta.count
+            if token_map is not None:
+                token_map = np.asarray(token_map, np.int32).reshape(-1)
+                if token_map.shape[0] != total:
+                    raise ValueError(
+                        f"token_map covers {token_map.shape[0]} ids but "
+                        f"the index has assigned {total}")
+                self._token_map = token_map.copy()
+            elif total <= cfg.padded_vocab:
+                self._token_map = np.arange(total, dtype=np.int32)
+            else:
+                raise ValueError(
+                    "streaming_index carries rows beyond the vocabulary; "
+                    "pass token_map mapping every assigned id to an "
+                    "embeddable token")
+            self._token_map_dev = jnp.asarray(self._token_map)
+            self.decode_fn = make_decode_step(cfg, mesh, return_hidden=True)
+            return
+        lsh_decode = self.lsh_decode
         meta = ((vocab_index.code_len, vocab_index.hash_bits,
                  vocab_index.eps) if lsh_decode else None)
         self._vidx_arrays = (dict(codes=vocab_index.codes,
@@ -167,6 +234,52 @@ class BatchedServer:
                                           num_probe=num_probe,
                                           engine=engine)
 
+    # -- streaming endpoints -------------------------------------------------
+
+    def insert_tokens(self, vectors: jax.Array,
+                      token_ids) -> np.ndarray:
+        """Register new unembedding rows (catalog upsert / vocab alias).
+
+        ``token_ids`` (k,) declare the embeddable token each new row decodes
+        to (generated ids must feed back through the embedding table).
+        Returns the global index ids (pass to :meth:`delete_tokens`)."""
+        if self.streaming_index is None:
+            raise ValueError("server was not built with a streaming_index")
+        token_ids = np.asarray(token_ids, np.int32).reshape(-1)
+        vectors = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        # validate before mutating the index
+        if token_ids.shape[0] != vectors.shape[0]:
+            raise ValueError(
+                f"{vectors.shape[0]} vectors but {token_ids.shape[0]} "
+                "token ids")
+        if ((token_ids < 0) | (token_ids >= self.cfg.padded_vocab)).any():
+            raise ValueError("token_ids must be embeddable (in "
+                             f"[0, {self.cfg.padded_vocab}))")
+        ids = self.streaming_index.insert(vectors)
+        if int(ids[0]) != self._token_map.shape[0]:
+            raise RuntimeError("index ids diverged from the token map "
+                               "(was the index mutated directly?)")
+        self._token_map = np.concatenate([self._token_map, token_ids])
+        self._token_map_dev = jnp.asarray(self._token_map)
+        return ids
+
+    def delete_tokens(self, ids) -> None:
+        """Tombstone catalog entries (token banning / upsert cleanup)."""
+        if self.streaming_index is None:
+            raise ValueError("server was not built with a streaming_index")
+        self.streaming_index.delete(ids)
+
+    def _streaming_topk(self, hidden: jax.Array) -> jax.Array:
+        """Greedy token via the mutable head (monotone final softcaps
+        commute with top-1, so the cap is skipped). ``query`` caps the
+        budget structurally, so per-mutation traffic stays on the jit
+        cache."""
+        si = self.streaming_index
+        _, ids = si.query(hidden.astype(jnp.float32), 1, self.num_probe)
+        return self._token_map_dev[ids[:, 0]]
+
+    # -- generation ----------------------------------------------------------
+
     def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
         """prompts: (B, S0) int32 -> generated ids (B, steps)."""
         B, S0 = prompts.shape
@@ -175,7 +288,9 @@ class BatchedServer:
         # first generated token comes from the prefill's last hidden state
         unembed = (self.params["embed"].T if self.cfg.tie_embeddings
                    else self.params["unembed"])
-        if self.lsh_decode:
+        if self.streaming_index is not None:
+            tok = self._streaming_topk(last_hidden)
+        elif self.lsh_decode:
             _, ids = lm_head.lsh_topk_tokens(
                 self.vocab_index, last_hidden, unembed, k=1,
                 num_probe=self.num_probe,
@@ -190,7 +305,10 @@ class BatchedServer:
         for t in range(steps - 1):
             pos = jnp.asarray(S0 + t, jnp.int32)
             args = (self.params, tok, caches, pos)
-            if self.lsh_decode:
+            if self.streaming_index is not None:
+                hidden, caches = self.decode_fn(*args)
+                tok = self._streaming_topk(hidden)
+            elif self.lsh_decode:
                 (vals, ids), caches = self.decode_fn(*args,
                                                      self._vidx_arrays)
                 tok = ids[:, 0]

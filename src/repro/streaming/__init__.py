@@ -1,0 +1,24 @@
+"""Streaming index service: mutable norm-range indexes (DESIGN.md §9).
+
+Layers insert/delete/compact/repartition on top of the immutable RANGE-LSH
+structures while keeping queries parity-exact with a from-scratch rebuild:
+
+  * :class:`~repro.streaming.delta.DeltaBuffer` — fixed-capacity append
+    log of recent inserts with tombstones (jit-static shapes).
+  * :class:`~repro.streaming.index.MutableIndex` — the service core:
+    storage + CSR base + delta + drift-triggered localized repartition.
+  * :class:`~repro.streaming.drift.DriftMonitor` — per-range occupancy and
+    norm-tail tracking; overflow/skew triggers.
+  * :mod:`~repro.streaming.persist` — mount/save through the checkpoint
+    manager's manifest/crc machinery.
+"""
+
+from repro.streaming.delta import DeltaBuffer
+from repro.streaming.drift import DriftMonitor
+from repro.streaming.index import MutableIndex, build, partition_edges
+from repro.streaming.persist import index_tree, load_index, save_index
+
+__all__ = [
+    "DeltaBuffer", "DriftMonitor", "MutableIndex", "build",
+    "partition_edges", "index_tree", "load_index", "save_index",
+]

@@ -1,0 +1,173 @@
+"""Fixed-capacity delta buffer: the mutable half of a streaming index
+(DESIGN.md §9).
+
+Inserts land here as a jit-static append log — raw vectors, norms, packed
+codes, range ids, global ids, and a liveness bitmap (unused slots and
+tombstoned inserts are dead). Queries brute-force the whole buffer with the
+``delta_scan`` kernel and merge the live slots into the base bucket
+traversal in the canonical ``(rank, CSR position)`` order; the compactor
+folds the log into a fresh CSR store and resets it.
+
+Exact-merge bookkeeping: the canonical candidate order ties buckets by
+their *directory position* — items sorted by ``(range_id, code, id)``. Two
+host-maintained arrays let one stable sort realize that order without ever
+rebuilding the base store:
+
+  * ``ord`` — where each slot's ``(range_id, code)`` key falls against the
+    base directory: ``2*i`` when it *is* directory bucket ``i`` (the slot
+    joins that bucket, after its base members — delta ids are always
+    larger), ``2*i - 1`` when it falls in the gap before bucket ``i`` (a
+    new bucket between base buckets).
+  * ``perm`` — the slots in ``(range_id, code, id)`` order. Arranging delta
+    columns by ``perm`` before the merge sort makes stable-sort ties land
+    in canonical order, covering distinct new buckets that share a gap
+    (same ``ord``).
+
+Both are O(capacity log) host work per mutation — the delta is small by
+design, that is why scanning it stays cheap.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def composite_key(rid: int, code_row: np.ndarray) -> int:
+    """(range_id, packed code) as one arbitrary-precision int, ordered
+    exactly like the CSR lexsort: rid major, then code words 0..W-1."""
+    k = int(rid)
+    for w in code_row:
+        k = (k << WORD_BITS) | int(w)
+    return k
+
+
+def directory_keys(bucket_rid: np.ndarray, bucket_code: np.ndarray
+                   ) -> List[int]:
+    """Sorted composite keys of the base bucket directory (host ints, for
+    bisect-based placement of delta inserts)."""
+    return [composite_key(r, c) for r, c in zip(bucket_rid, bucket_code)]
+
+
+class DeltaBuffer:
+    """Append log of recent inserts with tombstones (host-managed state,
+    device arrays with jit-static shapes).
+
+    Slots are assigned 0..capacity-1 in insert order and never recycled
+    until the compactor resets the buffer — global id ``store_rows + slot``
+    stays a bijection for the whole delta generation.
+    """
+
+    def __init__(self, capacity: int, dim: int, words: int):
+        if capacity < 1:
+            raise ValueError("delta capacity must be >= 1")
+        self.capacity = capacity
+        self.dim = dim
+        self.words = words
+        self.count = 0
+        # host mirrors (source of truth for host-side bookkeeping)
+        self._norms = np.zeros((capacity,), np.float32)
+        self._codes = np.zeros((capacity, words), np.uint32)
+        self._rid = np.zeros((capacity,), np.int32)
+        self._ids = np.zeros((capacity,), np.int32)
+        self._live = np.zeros((capacity,), bool)
+        self._ord = np.zeros((capacity,), np.int32)
+        self._perm = np.arange(capacity, dtype=np.int32)
+        # device arrays (what the jitted merge reads)
+        self.items = jnp.zeros((capacity, dim), jnp.float32)
+        self._sync()
+
+    # -- mutation ------------------------------------------------------------
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.count
+
+    @property
+    def live_count(self) -> int:
+        return int(self._live.sum())
+
+    def append(self, vectors: jax.Array, norms: np.ndarray,
+               codes: np.ndarray, rid: np.ndarray, ids: np.ndarray,
+               dir_keys: Sequence[int]) -> np.ndarray:
+        """Append a batch; returns the assigned slots. Caller guarantees
+        capacity (compact first) and supplies the current directory keys."""
+        k = int(norms.shape[0])
+        assert k <= self.free, "delta buffer overflow (compact first)"
+        slots = np.arange(self.count, self.count + k, dtype=np.int32)
+        self._norms[slots] = norms
+        self._codes[slots] = codes
+        self._rid[slots] = rid
+        self._ids[slots] = ids
+        self._live[slots] = True
+        self.count += k
+        self.items = self.items.at[jnp.asarray(slots)].set(
+            jnp.asarray(vectors, jnp.float32))
+        self.refresh_order(dir_keys)
+        return slots
+
+    def tombstone(self, slot: int, sync: bool = True) -> None:
+        """Mark a slot dead; pass ``sync=False`` inside a batch and call
+        :meth:`_sync` once after it (the sync re-uploads every array)."""
+        assert 0 <= slot < self.count and self._live[slot]
+        self._live[slot] = False
+        if sync:
+            self._sync()
+
+    def update_members(self, slots: np.ndarray, rid: np.ndarray,
+                       codes: np.ndarray, dir_keys: Sequence[int]) -> None:
+        """Repartition hook: range ids / codes of ``slots`` changed (range
+        re-encode); recompute placement against the new directory."""
+        self._rid[slots] = rid
+        self._codes[slots] = codes
+        self.refresh_order(dir_keys)
+
+    def reset(self) -> None:
+        """Compaction folded every slot into the base store."""
+        self.count = 0
+        self._live[:] = False
+        self._ord[:] = 0
+        self._perm = np.arange(self.capacity, dtype=np.int32)
+        self._sync()
+
+    def refresh_order(self, dir_keys: Sequence[int]) -> None:
+        """Recompute ``ord`` (placement vs the base directory) and ``perm``
+        (canonical slot order) for the used slots, then push to device."""
+        import bisect
+
+        n = self.count
+        for s in range(n):
+            key = composite_key(self._rid[s], self._codes[s])
+            i = bisect.bisect_left(dir_keys, key)
+            if i < len(dir_keys) and dir_keys[i] == key:
+                self._ord[s] = 2 * i          # joins base bucket i
+            else:
+                self._ord[s] = 2 * i - 1      # new bucket in the gap
+        if n:
+            used = np.lexsort(tuple(
+                [self._ids[:n]]
+                + [self._codes[:n, w].astype(np.int64)
+                   for w in range(self.words - 1, -1, -1)]
+                + [self._rid[:n].astype(np.int64)]))
+            self._perm = np.concatenate(
+                [used.astype(np.int32),
+                 np.arange(n, self.capacity, dtype=np.int32)])
+        else:
+            self._perm = np.arange(self.capacity, dtype=np.int32)
+        self._sync()
+
+    # -- device view ---------------------------------------------------------
+
+    def _sync(self) -> None:
+        self.norms = jnp.asarray(self._norms)
+        self.codes = jnp.asarray(self._codes)
+        self.rid = jnp.asarray(self._rid)
+        self.ids = jnp.asarray(self._ids)
+        self.live = jnp.asarray(self._live)
+        self.ord = jnp.asarray(self._ord)
+        self.perm = jnp.asarray(self._perm)

@@ -1,0 +1,139 @@
+"""Streaming-index persistence through the checkpoint manager
+(DESIGN.md §9).
+
+A serving process should *mount* an index, not rebuild it per boot: the
+CSR store is a data-dependent O(N log N) restructuring and the delta
+buffer carries not-yet-compacted traffic. Both are plain array pytrees, so
+they ride the existing ``checkpoint/manager.py`` machinery — atomic
+step directories, manifest with shapes/dtypes/crc32s, LATEST pointer —
+with one addition: the manifest itself supplies the restore template
+(shapes are not knowable from config alone: bucket count, storage growth
+and delta fill are all traffic-dependent), so ``load_index`` needs nothing
+but the directory.
+
+Layout (one ``step_*`` dir per snapshot)::
+
+    store/  items norms codes range_id live
+    delta/  items norms codes rid ids live perm ord count
+    csr/    item_ids bucket_start bucket_rid bucket_code csr_bucket
+            csr_codes csr_rid
+    meta/   upper lower edges A + 0-d scalars (code_len, hash_bits, eps,
+            capacity, max_tombstones, tomb_csr)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.streaming.delta import DeltaBuffer
+from repro.streaming.index import _CSR, MutableIndex
+
+_KEY_RE = re.compile(r"\['([^']*)'\]")
+
+
+def index_tree(mindex: MutableIndex) -> Dict[str, Any]:
+    """The index as an array pytree (0-d arrays for static scalars)."""
+    d = mindex.delta
+    c = mindex._csr
+    return {
+        "store": {
+            "items": mindex.items,
+            "norms": jnp.asarray(mindex._norms),
+            "codes": jnp.asarray(mindex._codes),
+            "range_id": jnp.asarray(mindex._rid),
+            "live": jnp.asarray(mindex._live),
+        },
+        "delta": {
+            "items": d.items,
+            "norms": jnp.asarray(d._norms),
+            "codes": jnp.asarray(d._codes),
+            "rid": jnp.asarray(d._rid),
+            "ids": jnp.asarray(d._ids),
+            "live": jnp.asarray(d._live),
+            "perm": jnp.asarray(d._perm),
+            "ord": jnp.asarray(d._ord),
+            "count": jnp.asarray(d.count, jnp.int32),
+        },
+        "csr": {k: jnp.asarray(v) for k, v in c._asdict().items()},
+        "meta": {
+            "upper": jnp.asarray(mindex.upper),
+            "lower": jnp.asarray(mindex.lower),
+            "edges": jnp.asarray(mindex.edges),
+            "A": mindex.A,
+            "code_len": jnp.asarray(mindex.code_len, jnp.int32),
+            "hash_bits": jnp.asarray(mindex.hash_bits, jnp.int32),
+            "eps": jnp.asarray(mindex.eps, jnp.float32),
+            "capacity": jnp.asarray(mindex.capacity, jnp.int32),
+            "max_tombstones": jnp.asarray(mindex.max_tombstones, jnp.int32),
+            "tomb_csr": jnp.asarray(mindex.tomb_csr, jnp.int32),
+        },
+    }
+
+
+def save_index(manager: CheckpointManager, step: int,
+               mindex: MutableIndex) -> str:
+    """Snapshot the full mutable state as checkpoint ``step``."""
+    return manager.save(step, index_tree(mindex))
+
+
+def _template_from_manifest(directory: str, step: int) -> Dict[str, Any]:
+    """Rebuild the restore template (nested dict of zeros) from the
+    manifest — shapes/dtypes come from the snapshot itself."""
+    path = os.path.join(directory, f"step_{step:09d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    tree: Dict[str, Any] = {}
+    for key, meta in manifest["leaves"].items():
+        parts = _KEY_RE.findall(key)
+        if len(parts) != key.count("["):
+            raise ValueError(f"unparseable manifest key {key!r}")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.zeros(
+            tuple(meta["shape"]), np.dtype(meta["logical_dtype"]))
+    return tree
+
+
+def load_index(directory: str, step: Optional[int] = None,
+               **kw) -> MutableIndex:
+    """Mount an index from a checkpoint directory (crc-verified restore;
+    no CSR rebuild). ``kw`` passes runtime knobs (engine, impl,
+    repartition_policy, skew thresholds) through to :class:`MutableIndex`."""
+    manager = CheckpointManager(directory)
+    if step is None:
+        step = manager.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    tree = manager.restore(step, _template_from_manifest(directory, step))
+    st, dl, cs, meta = tree["store"], tree["delta"], tree["csr"], tree["meta"]
+    capacity = int(meta["capacity"])
+    delta = DeltaBuffer(capacity, int(dl["items"].shape[1]),
+                        int(dl["codes"].shape[1]))
+    delta.count = int(dl["count"])
+    delta._norms = np.array(dl["norms"])
+    delta._codes = np.array(dl["codes"])
+    delta._rid = np.array(dl["rid"])
+    delta._ids = np.array(dl["ids"])
+    delta._live = np.array(dl["live"])
+    delta._perm = np.array(dl["perm"])
+    delta._ord = np.array(dl["ord"])
+    delta.items = jnp.asarray(dl["items"])
+    delta._sync()
+    csr = _CSR(**{k: np.asarray(v) for k, v in cs.items()})
+    return MutableIndex(
+        items=st["items"], norms=np.asarray(st["norms"]),
+        codes=np.asarray(st["codes"]), range_id=np.asarray(st["range_id"]),
+        live=np.asarray(st["live"]), upper=np.asarray(meta["upper"]),
+        lower=np.asarray(meta["lower"]), edges=np.asarray(meta["edges"]),
+        A=meta["A"], code_len=int(meta["code_len"]),
+        hash_bits=int(meta["hash_bits"]), eps=float(meta["eps"]),
+        capacity=capacity, max_tombstones=int(meta["max_tombstones"]),
+        csr=csr, delta=delta, tomb_csr=int(meta["tomb_csr"]), **kw)

@@ -8,7 +8,7 @@ import pytest
 from repro.core import range_lsh, simple_lsh, topk
 from repro.core.bucket_index import (build_bucket_index, bucket_sizes,
                                      rank_table)
-from repro.core.engine import QueryEngine
+from repro.core.engine import AUTO_DENSE_RATIO, QueryEngine, select_engine
 from repro.core.probe import probe_table
 from repro.kernels import ops, ref
 
@@ -138,6 +138,27 @@ def test_full_probe_budget_is_exact(longtail_ds, range_index):
     bv, bi = range_lsh.query(range_index, queries, 5, n,
                              engine="bucket", buckets=buckets)
     np.testing.assert_allclose(np.asarray(bv), np.asarray(ev), atol=1e-4)
+
+
+def test_auto_engine_break_even_heuristic(longtail_ds):
+    """engine="auto" resolves by directory size vs N: the BENCH_0001 arms
+    (L=16: B/N~0.33 -> bucket 3x; L=32: B/N~0.99 -> dense) land on opposite
+    sides of the encoded break-even, and real indexes resolve accordingly."""
+    # the measured BENCH_0001 arms
+    assert select_engine(33362, 100_000) == "bucket"
+    assert select_engine(98662, 100_000) == "dense"
+    assert select_engine(0, 1) == "bucket"
+    # short codes collapse items into few buckets -> auto picks bucket
+    short = range_lsh.build(longtail_ds.items, jax.random.PRNGKey(3), 6, 4)
+    eng_short = QueryEngine(short, engine="auto")
+    n = longtail_ds.items.shape[0]
+    assert eng_short.buckets.num_buckets < AUTO_DENSE_RATIO * n
+    assert eng_short.engine == "bucket"
+    # long codes make nearly every bucket a singleton -> auto picks dense
+    long = range_lsh.build(longtail_ds.items, jax.random.PRNGKey(3), 32, 4)
+    eng_long = QueryEngine(long, engine="auto")
+    assert eng_long.buckets.num_buckets >= AUTO_DENSE_RATIO * n
+    assert eng_long.engine == "dense"
 
 
 def test_lm_head_bucket_arm_full_budget_matches_exact():

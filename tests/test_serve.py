@@ -102,6 +102,104 @@ def test_batched_server_bucket_engine(small_lm):
                                   np.asarray(out_exact))
 
 
+def test_bucket_arrays_roundtrip(small_lm):
+    """The replicated-array plumbing the decode step (and the streaming
+    path) relies on: a bucket store shipped as plain arrays and rebuilt on
+    the other side emits exactly the candidates of a QueryEngine driven by
+    the original store."""
+    from repro.core.bucket_index import BucketIndex, build_bucket_index
+    from repro.core.engine import QueryEngine, bucket_candidates, \
+        encode_queries
+
+    cfg, params = small_lm
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    vidx = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(5),
+                                     code_len=64, num_ranges=16)
+    buckets = build_bucket_index(vidx)
+    arrs = serve.bucket_arrays(buckets)         # what rides to the step
+    rebuilt = BucketIndex(arrs["item_ids"], arrs["bucket_start"],
+                          arrs["bucket_rid"], arrs["bucket_code"],
+                          arrs["rank"], vidx.hash_bits, vidx.eps)
+    hidden = jax.random.normal(jax.random.PRNGKey(6), (8, cfg.d_model))
+    q_codes = encode_queries(vidx, hidden)
+    got = bucket_candidates(rebuilt, q_codes, 256)
+    eng = QueryEngine(vidx, engine="bucket", buckets=buckets)
+    want = eng.candidates(hidden, 256)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_server_streaming_head(small_lm):
+    """Mutable-head server: full probe budget matches the exact server;
+    delete_tokens bans a token from decoding; insert_tokens with a boosted
+    alias row wins it back."""
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    sidx = serve.build_streaming_vocab_index(
+        unembed, jax.random.PRNGKey(5), code_len=32, num_ranges=8,
+        capacity=32)
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 streaming_index=sidx,
+                                 num_probe=cfg.padded_vocab)
+    exact_server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out_stream = server.generate(prompts, steps=3)
+    out_exact = exact_server.generate(prompts, steps=3)
+    np.testing.assert_array_equal(np.asarray(out_stream),
+                                  np.asarray(out_exact))
+    # ban the greedy first token of request 0: it must not come back
+    banned = int(out_exact[0, 0])
+    server.delete_tokens([banned])
+    out_banned = server.generate(prompts, steps=1)
+    assert int(out_banned[0, 0]) != banned
+    # upsert: a 2x-boosted alias column decoding back to the banned token
+    col = (params["embed"].T if cfg.tie_embeddings
+           else params["unembed"])[:, banned]
+    ids = server.insert_tokens(2.0 * col[None, :], [banned])
+    assert int(ids[0]) >= cfg.padded_vocab
+    out_boost = server.generate(prompts, steps=1)
+    assert int(out_boost[0, 0]) == banned
+
+
+def test_batched_server_mounts_index_with_pending_delta(small_lm):
+    """A server mounting an index that already carries un-compacted delta
+    traffic (the load_index flow) must map every assigned id, and
+    insert_tokens must stay contiguous with the token map."""
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    sidx = serve.build_streaming_vocab_index(
+        unembed, jax.random.PRNGKey(5), code_len=32, num_ranges=8,
+        capacity=32)
+    pre = sidx.insert(1e-3 * jnp.ones((2, cfg.d_model)))   # before mounting
+    # identity can't cover non-vocab rows: an explicit map is required
+    with pytest.raises(ValueError):
+        serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                            streaming_index=sidx,
+                            num_probe=cfg.padded_vocab)
+    tmap = np.concatenate([np.arange(sidx.store_size, dtype=np.int32),
+                           np.zeros((2,), np.int32)])
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 streaming_index=sidx,
+                                 num_probe=cfg.padded_vocab,
+                                 token_map=tmap)
+    assert server._token_map.shape[0] == sidx.store_size + 2
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out = server.generate(prompts, steps=2)
+    assert out.shape == (2, 2)
+    assert bool((out < cfg.vocab).all())    # every id decodes embeddable
+    ids = server.insert_tokens(jnp.ones((1, cfg.d_model)), [0])
+    assert int(ids[0]) == int(pre[-1]) + 1
+    live_before = server.streaming_index.live_count
+    map_before = server._token_map.shape[0]
+    with pytest.raises(ValueError):     # mismatch rejected before mutation
+        server.insert_tokens(jnp.ones((2, cfg.d_model)), [0])
+    assert server.streaming_index.live_count == live_before
+    assert server._token_map.shape[0] == map_before
+
+
 def test_greedy_continuation_matches_teacher_forcing(small_lm):
     """prefill -> extend_cache -> decode produces the same next token as a
     full forward pass at each step (teacher-forced prefix)."""

@@ -1,0 +1,350 @@
+"""Streaming index subsystem: delta-scan kernel, merge parity with
+from-scratch rebuilds, drift-triggered repartition, persistence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import streaming
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import simple_lsh, topk
+from repro.core.bucket_index import build_buckets
+from repro.core.engine import bucket_candidates, dense_candidates
+from repro.data.synthetic import make_dataset
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imagenet", jax.random.PRNGKey(0), n=500, d=16,
+                        num_queries=6)
+
+
+@pytest.fixture(scope="module")
+def pool(ds):
+    """Held-out insert pool with the same norm profile."""
+    extra = make_dataset("imagenet", jax.random.PRNGKey(9), n=200, d=16,
+                         num_queries=1)
+    return np.asarray(extra.items)
+
+
+def rebuild_candidates(mi, queries, num_probe, engine="bucket",
+                       impl="ref"):
+    """Oracle: rebuild a bucket store from scratch over the mutated live
+    set (frozen hashes, current bounds) via the *core* build path, then
+    run the core engine and map back to global ids."""
+    rows = np.flatnonzero(mi._live)
+    n = mi.delta.count
+    slots = np.flatnonzero(mi.delta._live[:n])
+    codes = np.concatenate([mi._codes[rows], mi.delta._codes[slots]])
+    rid = np.concatenate([mi._rid[rows], mi.delta._rid[slots]])
+    gids = np.concatenate([rows, mi.store_size + slots]).astype(np.int32)
+    b = build_buckets(jnp.asarray(codes), jnp.asarray(rid),
+                      jnp.asarray(mi.upper), mi.hash_bits, mi.eps)
+    q_codes = mi.encode_queries(queries)
+    if engine == "bucket":
+        local = bucket_candidates(b, q_codes, num_probe, impl=impl)
+    else:
+        local = dense_candidates(b, q_codes, jnp.asarray(codes),
+                                 jnp.asarray(rid), num_probe, impl=impl)
+    return gids[np.asarray(local)]
+
+
+def assert_parity(mi, queries, num_probe, impl="ref"):
+    for engine in ("bucket", "dense"):
+        mi.engine = engine
+        got = np.asarray(mi.candidates(queries, num_probe))
+        want = rebuild_candidates(mi, queries, num_probe, engine, impl)
+        np.testing.assert_array_equal(got, want)
+    mi.engine = "auto"
+
+
+def assert_codes_invariant(mi):
+    """Every live item's stored code equals a fresh encode under the
+    current bounds — repartition kept hashes semantically valid."""
+    rows = np.flatnonzero(mi._live)
+    fresh = mi._encode(mi.items[jnp.asarray(rows)], mi._rid[rows])
+    np.testing.assert_array_equal(mi._codes[rows], fresh)
+    n = mi.delta.count
+    slots = np.flatnonzero(mi.delta._live[:n])
+    if slots.size:
+        fresh = mi._encode(mi.delta.items[jnp.asarray(slots)],
+                           mi.delta._rid[slots])
+        np.testing.assert_array_equal(mi.delta._codes[slots], fresh)
+
+
+# -- delta-scan kernel -------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,c,w", [(8, 64, 1), (37, 130, 2), (64, 128, 4),
+                                   (1, 1, 1)])
+def test_delta_scan_matches_ref(q, c, w):
+    k1, k2 = jax.random.PRNGKey(q), jax.random.PRNGKey(c)
+    qc = jax.random.bits(k1, (q, w), jnp.uint32)
+    dc = jax.random.bits(k2, (c, w), jnp.uint32)
+    live = jax.random.bernoulli(jax.random.PRNGKey(w), 0.5, (c,))
+    got = ops.delta_scan(qc, dc, live, 32 * w, impl="pallas")
+    want = ref.delta_scan_ref(qc, dc, live, 32 * w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    dead = ~np.asarray(live)
+    assert np.all(np.asarray(got)[:, dead] == -1)
+
+
+# -- merge parity (the acceptance criterion) ---------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("kind", ["range", "simple"])
+def test_parity_any_interleaving(ds, pool, kind, impl):
+    """For an interleaving of inserts and deletes (base and delta ids,
+    overflow norms included), merged (base + delta) candidates are
+    identical to a from-scratch rebuild on the mutated dataset — both
+    engines, ref and pallas, RangeLSH and SimpleLSH."""
+    if kind == "range":
+        mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                             capacity=64, max_tombstones=16, impl=impl)
+    else:
+        si = simple_lsh.build(ds.items, jax.random.PRNGKey(1), 12)
+        mi = streaming.MutableIndex.from_simple_lsh(
+            si, capacity=64, max_tombstones=16, impl=impl)
+    probes = (20, 111) if impl == "ref" else (33,)
+    for p in probes:
+        assert_parity(mi, ds.queries, p, impl)
+    ids1 = mi.insert(pool[:30])
+    mi.delete([0, 7, 13, int(ids1[4]), int(ids1[20])])
+    big = pool[:1] / np.linalg.norm(pool[:1]) * float(mi.upper.max()) * 2.5
+    mi.insert(big)                                    # overflow event
+    mi.delete(ids1[5:9].tolist())
+    mi.insert(pool[30:45])
+    for p in probes:
+        assert_parity(mi, ds.queries, p, impl)
+    assert_codes_invariant(mi)
+    before = np.asarray(mi.candidates(ds.queries, probes[0]))
+    mi.compact()                                      # results unchanged
+    np.testing.assert_array_equal(
+        before, np.asarray(mi.candidates(ds.queries, probes[0])))
+    assert_parity(mi, ds.queries, probes[0], impl)
+
+
+def test_full_budget_query_is_exact(ds, pool):
+    """num_probe == live count covers everything: streaming query equals
+    exact MIPS over the mutated live set."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                         capacity=64)
+    ids = mi.insert(pool[:40])
+    mi.delete([2, 3, int(ids[0])])
+    live_vecs, gids = mi.live_vectors()
+    ev, ei = topk.exact_mips(ds.queries, live_vecs, 5)
+    sv, si = mi.query(ds.queries, 5, mi.live_count)
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(ev), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(si), gids[np.asarray(ei)])
+
+
+# -- delta-buffer edge cases -------------------------------------------------
+
+
+def test_empty_delta_matches_base_engine(ds):
+    """Fresh index (empty delta): merged candidates equal the immutable
+    core engine's output on the same store."""
+    from repro.core import range_lsh
+    from repro.core.bucket_index import build_bucket_index
+    from repro.core.engine import QueryEngine
+
+    idx = range_lsh.build(ds.items, jax.random.PRNGKey(1), 12, 8)
+    mi = streaming.MutableIndex.from_range_lsh(idx, capacity=32)
+    eng = QueryEngine(idx, engine="bucket",
+                      buckets=build_bucket_index(idx))
+    np.testing.assert_array_equal(
+        np.asarray(mi.candidates(ds.queries, 64)),
+        np.asarray(eng.candidates(ds.queries, 64)))
+
+
+def test_full_delta_auto_compacts(ds, pool):
+    """Hitting capacity folds the delta automatically; ids stay stable
+    and parity holds across the fold."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 4,
+                         capacity=16)
+    ids = []
+    for i in range(0, 48, 8):
+        ids.append(mi.insert(pool[i:i + 8]))
+    ids = np.concatenate(ids)
+    assert mi.num_compactions >= 2
+    assert len(np.unique(ids)) == 48          # ids never reused
+    assert mi.delta.count <= mi.capacity
+    # every id resolves: delete half of them, then parity
+    mi.delete(ids[::2].tolist())
+    assert_parity(mi, ds.queries, 40)
+    # a single over-capacity batch gets chunked
+    big_ids = mi.insert(pool[48:48 + 24])
+    assert big_ids.shape == (24,) and len(np.unique(big_ids)) == 24
+    assert_parity(mi, ds.queries, 40)
+
+
+def test_delete_batch_is_atomic(ds):
+    """A bad id rejects the whole batch: nothing tombstoned, mirrors in
+    sync, and the valid ids remain deletable on retry."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 4,
+                         capacity=16)
+    with pytest.raises(KeyError):
+        mi.delete([5, 10 ** 7])
+    assert mi._live[5] and mi.tomb_csr == 0
+    with pytest.raises(ValueError):
+        mi.delete([5, 5])
+    mi.delete([5])              # retry of the valid id succeeds
+    assert not mi._live[5]
+    assert_parity(mi, ds.queries, 40)
+
+
+def test_all_tombstoned_range(ds):
+    """Deleting every item of one range leaves a live, parity-exact index
+    that never emits the dead range's items."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 4,
+                         capacity=32, max_tombstones=500)
+    victims = np.flatnonzero(mi._rid == 2)
+    mi.delete(victims.tolist())
+    assert int(self_counts := mi.monitor.counts[2]) == 0, self_counts
+    cand = np.asarray(mi.candidates(ds.queries, mi.live_count))
+    assert not np.isin(cand, victims).any()
+    assert_parity(mi, ds.queries, 50)
+
+
+def test_insert_into_empty_uniform_bin(ds):
+    """Uniform partitioning leaves empty bins (long-tail norms); the first
+    insert into one raises its bound from zero (bin_init drift event) and
+    stays parity-exact."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 16,
+                         scheme="uniform", capacity=32)
+    empty = np.flatnonzero(mi._count_live() == 0)
+    assert empty.size, "long-tail norms should leave empty uniform bins"
+    j = int(empty[0])
+    lo = float(mi.edges[j - 1]) if j else 0.0
+    hi = float(mi.edges[j]) if j < mi.num_ranges - 1 else float(
+        mi.upper.max())
+    target = (lo + hi) / 2
+    v = np.ones((1, 16), np.float32)
+    v = v / np.linalg.norm(v) * target
+    assert mi.upper[j] == 0.0
+    ids = mi.insert(v)
+    assert any(e["kind"] == "bin_init" and e["range"] == j
+               for e in mi.events)
+    assert mi.upper[j] == pytest.approx(target, rel=1e-5)
+    assert int(mi.delta._rid[0]) == j
+    assert_parity(mi, ds.queries, 50)
+    # the new item is findable: full-budget probe must include it
+    cand = np.asarray(mi.candidates(ds.queries, mi.live_count))
+    assert np.isin(ids[0], cand).all()
+
+
+# -- drift-triggered repartition ---------------------------------------------
+
+
+def test_overflow_triggers_localized_repartition(ds):
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                         capacity=32)
+    top = int(np.argmax(mi.upper))
+    v = np.ones((1, 16), np.float32)
+    v = v / np.linalg.norm(v) * float(mi.upper[top]) * 3.0
+    mi.insert(v)
+    ev = [e for e in mi.events if e["kind"] == "overflow_localized"]
+    assert len(ev) == 1 and ev[0]["range"] == top
+    assert mi.num_repartitions == 1 and mi.num_full_rebuilds == 0
+    assert mi.upper[top] == pytest.approx(
+        float(np.linalg.norm(v)), rel=1e-5)
+    assert_codes_invariant(mi)
+    assert_parity(mi, ds.queries, 50)
+
+
+def test_repartition_policy_full_rebuilds(ds):
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                         capacity=32, repartition_policy="full")
+    v = np.ones((1, 16), np.float32) * float(mi.upper.max())
+    mi.insert(v)
+    assert mi.num_full_rebuilds == 1 and mi.num_repartitions == 0
+    assert_codes_invariant(mi)
+    assert_parity(mi, ds.queries, 50)
+
+
+def test_skew_triggers_rebalance(ds):
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 4,
+                         capacity=512, skew_ratio=1.5, min_skew_count=50)
+    med = float(np.median(mi._norms))
+    rng = np.random.default_rng(3)
+    dirs = rng.normal(size=(300, 16)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    mi.insert(dirs * med)                  # pile into one range
+    ev = [e for e in mi.events if e["kind"] == "skew_rebalance"]
+    assert ev, "occupancy skew should trigger a rebalance"
+    counts = mi.monitor.counts
+    assert counts.max() <= mi.monitor.skew_ratio * counts.sum() / 4 * 1.5
+    assert_codes_invariant(mi)
+    assert_parity(mi, ds.queries, 60)
+
+
+def test_unsplittable_skew_is_muted(ds):
+    """A skewed range whose members all share one norm can't be split;
+    the failed rebalance is muted (one O(N) attempt, not one per insert)
+    until the next structural event."""
+    rng = np.random.default_rng(5)
+    dirs = rng.normal(size=(200, 16)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)   # all norm 1
+    mi = streaming.build(jnp.asarray(dirs), jax.random.PRNGKey(1), 12, 4,
+                         capacity=512, skew_ratio=1.2, min_skew_count=20)
+    extra = rng.normal(size=(80, 16)).astype(np.float32)
+    extra /= np.linalg.norm(extra, axis=1, keepdims=True)
+    mi.insert(extra[:40])
+    blocked = [e for e in mi.events if e["kind"] == "rebalance_blocked"]
+    assert len(blocked) == 1
+    mi.insert(extra[40:])                  # muted: no second attempt
+    blocked = [e for e in mi.events if e["kind"] == "rebalance_blocked"]
+    assert len(blocked) == 1
+    assert_parity(mi, ds.queries, 60)
+    mi.compact()                           # structural event re-arms
+    assert not mi._skew_muted
+
+
+def test_monitor_quantiles_report_drift(ds):
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 4,
+                         capacity=256)
+    hi = float(mi.upper.max())
+    rng = np.random.default_rng(4)
+    dirs = rng.normal(size=(64, 16)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    mi.insert(dirs * hi * 0.99)            # fatten the tail, no overflow
+    snap = mi.monitor.snapshot()
+    top = mi.num_ranges - 1
+    assert snap["recent_q95_over_baseline"][top] > 1.0
+
+
+# -- persistence -------------------------------------------------------------
+
+
+def test_checkpoint_mount_roundtrip(ds, pool, tmp_path):
+    """save -> load mounts the index without a rebuild: identical queries,
+    identical behavior under further mutation."""
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                         capacity=64)
+    ids = mi.insert(pool[:20])
+    mi.delete([1, 2, int(ids[3])])
+    mgr = CheckpointManager(str(tmp_path))
+    streaming.save_index(mgr, 7, mi)
+    loaded = streaming.load_index(str(tmp_path))
+    assert loaded.live_count == mi.live_count
+    assert loaded.tomb_csr == mi.tomb_csr
+    np.testing.assert_array_equal(
+        np.asarray(loaded.candidates(ds.queries, 80)),
+        np.asarray(mi.candidates(ds.queries, 80)))
+    # identical mutations diverge nowhere
+    i1, i2 = mi.insert(pool[20:25]), loaded.insert(pool[20:25])
+    np.testing.assert_array_equal(i1, i2)
+    mi.delete([int(i1[0])])
+    loaded.delete([int(i2[0])])
+    np.testing.assert_array_equal(
+        np.asarray(loaded.candidates(ds.queries, 80)),
+        np.asarray(mi.candidates(ds.queries, 80)))
+    assert_parity(loaded, ds.queries, 80)
+
+
+def test_load_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        streaming.load_index(str(tmp_path))
