@@ -1,0 +1,88 @@
+"""Catalyst benchmark: norm-range partitioning over pluggable families.
+
+The §5 claim (and the follow-up "Norm-Range Partition: A Universal
+Catalyst for LSH based MIPS") is that partitioning improves *any* base
+hash. With the composable index API this is one axis: for each family,
+build the flat spec (m=1) and the ranged spec (m=M) at the same total
+code budget and measure the probe count needed to reach a fixed recall —
+the catalyst speedup is ``probes_flat / probes_ranged``.
+
+Writes ``BENCH_0003.json`` at the repo root (next free number in smoke
+mode goes to a temp dir); runs in the CI benchmark-smoke step
+(``REPRO_BENCH_SMOKE=1``) at toy sizes.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt, \
+    time_call
+from repro.core import topk
+from repro.core.index import IndexSpec, build
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K = 10
+TARGET_RECALL = 0.5
+
+if bench_smoke():                    # CI canary: toy N, packed families
+    N, Q, L, M = 4_000, 16, 16, 32
+    FAMILIES = ("simple", "sign_alsh")
+else:
+    N, Q, L, M = 50_000, 100, 32, 64
+    FAMILIES = ("simple", "sign_alsh", "l2_alsh")
+
+
+def probes_to_recall(order, truth, target: float, n: int) -> int:
+    """Smallest probe count reaching ``target`` recall (log-grid search)."""
+    grid = np.unique(np.geomspace(K, n, 48).astype(int))
+    rec = np.asarray(topk.probed_recall_curve(order, truth, list(grid)))
+    idx = np.argmax(rec >= target)
+    if rec[idx] < target:
+        return n
+    return int(grid[idx])
+
+
+def bench_family(ds, truth, name: str) -> dict:
+    key = jax.random.PRNGKey(7)
+    record = {}
+    orders = {}
+    for arm, m in (("flat", 1), ("ranged", M)):
+        spec = IndexSpec(family=name, code_len=L, m=m)
+        idx = build(spec, ds.items, key)
+        us = time_call(lambda idx=idx: idx.probe_order(ds.queries),
+                       warmup=1, iters=1)
+        orders[arm] = idx.probe_order(ds.queries)
+        probes = probes_to_recall(orders[arm], truth, TARGET_RECALL, N)
+        record[arm] = {"num_ranges": m, "hash_bits": idx.hash_bits,
+                       "probe_order_us": round(us, 1),
+                       f"probes_to_r{TARGET_RECALL}": probes}
+        emit(f"catalyst_{name}_{arm}", us,
+             f"probes@r{TARGET_RECALL}={probes}|m={m}|L={L}")
+    p_flat = record["flat"][f"probes_to_r{TARGET_RECALL}"]
+    p_ranged = record["ranged"][f"probes_to_r{TARGET_RECALL}"]
+    record["catalyst_speedup"] = round(p_flat / max(p_ranged, 1), 2)
+    emit(f"catalyst_{name}_speedup", 0.0,
+         f"flat_over_ranged_probes={fmt(record['catalyst_speedup'], 2)}")
+    return record
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, num_queries=Q)
+    _, truth = topk.exact_mips(ds.queries, ds.items, K)
+    out = {"bench": "catalyst", "n": N, "num_queries": Q, "code_len": L,
+           "num_ranges": M, "k": K, "target_recall": TARGET_RECALL,
+           "families": {}}
+    for name in FAMILIES:
+        out["families"][name] = bench_family(ds, truth, name)
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("catalyst_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

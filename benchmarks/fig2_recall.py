@@ -15,9 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, fmt, time_call
-from repro.core import l2_alsh, range_lsh, simple_lsh, topk
+from repro.core import topk
 from repro.core.bucket_index import build_bucket_index
 from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
 from repro.data.synthetic import make_dataset
 
 SIZES = {"netflix": 17770, "yahoomusic": 20000, "imagenet": 50000}
@@ -46,19 +47,21 @@ def main() -> None:
         for L in (16, 32, 64):
             m = M_FOR_L[L]
             key = jax.random.PRNGKey(L)
+            # spec-driven builds (DESIGN.md §10); "range" is the
+            # partitioned SIMPLE-LSH composition
             indexes = {
-                "range": range_lsh.build(ds.items, key, L, m),
-                "simple": simple_lsh.build(ds.items, key, L),
-                "l2alsh": l2_alsh.build(ds.items, key, L),
+                "range": build(IndexSpec(family="simple", code_len=L, m=m),
+                               ds.items, key),
+                "simple": build(IndexSpec(family="simple", code_len=L),
+                                ds.items, key),
+                "l2alsh": build(IndexSpec(family="l2_alsh", code_len=L),
+                                ds.items, key),
             }
             orders = {}
             for algo, idx in indexes.items():
-                mod = {"range": range_lsh, "simple": simple_lsh,
-                       "l2alsh": l2_alsh}[algo]
-                us = time_call(lambda mod=mod, idx=idx:
-                               mod.probe_order(idx, ds.queries),
+                us = time_call(lambda idx=idx: idx.probe_order(ds.queries),
                                warmup=1, iters=1)
-                order = mod.probe_order(idx, ds.queries)
+                order = idx.probe_order(ds.queries)
                 orders[algo] = order
                 grid = [max(K, int(n * f)) for f in (0.005, 0.02, 0.10)]
                 rec = probe_curve(order, truth, grid)

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.kernel_bench",
     "benchmarks.engine_bench",
     "benchmarks.streaming_bench",
+    "benchmarks.catalyst_bench",
     "benchmarks.lsh_decode",
 ]
 

@@ -88,9 +88,25 @@ def rank_table(upper: jax.Array, hash_bits: int,
     return flat.reshape(m, hash_bits + 1)
 
 
+def rank_from_scores(table: jax.Array) -> jax.Array:
+    """(R, K+1) int32 probe rank of each ``(range, match count)`` pair
+    given a family score table (core/family.py): position in the stable
+    descending-score order, 0 = probed first. For the eq.-12 cosine table
+    this equals :func:`rank_table`; other families (e.g. L2-ALSH's
+    inverted-collision estimate) interleave ranges differently."""
+    flat = table.reshape(-1)
+    n = flat.shape[0]
+    order = jnp.argsort(-flat, stable=True)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return rank.reshape(table.shape)
+
+
 def build_buckets(codes: jax.Array, range_id: jax.Array, upper: jax.Array,
-                  hash_bits: int, eps: float = DEFAULT_EPS) -> BucketIndex:
-    """Assemble the CSR store from raw index arrays (host-side)."""
+                  hash_bits: int, eps: float = DEFAULT_EPS, *,
+                  rank: jax.Array = None) -> BucketIndex:
+    """Assemble the CSR store from raw index arrays (host-side). ``rank``
+    overrides the eq.-12 rank table (family-specific probe orders)."""
     c = np.asarray(jax.device_get(codes))
     rid = np.asarray(jax.device_get(range_id)).astype(np.int64)
     n, w = c.shape
@@ -111,7 +127,8 @@ def build_buckets(codes: jax.Array, range_id: jax.Array, upper: jax.Array,
         bucket_start=jnp.asarray(bucket_start),
         bucket_rid=jnp.asarray(rid_s[first].astype(np.int32)),
         bucket_code=jnp.asarray(c_s[first]),
-        rank=rank_table(jnp.asarray(upper), hash_bits, eps),
+        rank=(rank_table(jnp.asarray(upper), hash_bits, eps)
+              if rank is None else jnp.asarray(rank)),
         hash_bits=hash_bits,
         eps=eps,
     )
@@ -120,10 +137,19 @@ def build_buckets(codes: jax.Array, range_id: jax.Array, upper: jax.Array,
 def build_bucket_index(index) -> BucketIndex:
     """Build the bucket store from any supported index.
 
-    Accepts ``RangeLSHIndex`` / ``VocabIndex`` (have ``range_id``/``upper``/
-    ``hash_bits``/``eps``) or ``SimpleLSHIndex`` (single range with the
-    global max norm U; eq. 12 with m=1 degenerates to Hamming order).
+    Accepts a spec-built ``ComposedIndex`` (its family score table defines
+    the probe rank), ``RangeLSHIndex`` / ``VocabIndex`` (have ``range_id``/
+    ``upper``/``hash_bits``/``eps``) or ``SimpleLSHIndex`` (single range
+    with the global max norm U; eq. 12 with m=1 degenerates to Hamming
+    order).
     """
+    if getattr(index, "codes", None) is not None and index.codes.ndim == 3:
+        raise ValueError("multi-table single-probe has no bucket store; "
+                         "query it via its own candidate_scores/query")
+    if hasattr(index, "table"):
+        return build_buckets(index.codes, index.range_id, index.upper_eff,
+                             index.hash_bits, index.eps,
+                             rank=rank_from_scores(index.table))
     if hasattr(index, "range_id"):
         # raw per-range upper, matching probe.item_scores (empty ranges are
         # never referenced by a bucket, so their phantom table entries are

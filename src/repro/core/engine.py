@@ -20,10 +20,13 @@ CSR position — items sorted by (range_id, code, id) — breaks every tie
 deterministically, so for a fixed ``(index, queries, num_probe)`` the two
 engines return *identical* candidate id sequences (tested).
 
-``QueryEngine`` wraps an index (RangeLSH / SimpleLSH / VocabIndex) plus an
+``QueryEngine`` wraps an index (a spec-built ComposedIndex of any hash
+family, or a legacy RangeLSH / SimpleLSH / VocabIndex tuple) plus an
 optional prebuilt :class:`BucketIndex`, exposes batched ``candidates`` /
-``query``, and is what ``range_lsh.query`` / ``simple_lsh.query`` and the
-LSH-decode serving head dispatch through.
+``query``, and is what ``ComposedIndex.query``, the legacy module shims
+and the LSH-decode serving head dispatch through. Query encoding and
+match counting dispatch through the index's family when it has one, so
+integer-hash families (L2-ALSH) traverse buckets too.
 """
 
 from __future__ import annotations
@@ -57,28 +60,41 @@ def select_engine(num_buckets: int, num_items: int) -> str:
 
 def encode_queries(index, queries: jax.Array, *,
                    impl: str = "auto") -> jax.Array:
-    """Hash queries with ``P(q) = [q; 0]`` against the index's projections.
+    """Hash queries against the index's hash parameters.
 
-    Identical for every supported index type (they all share the
-    ``(d+1, L)`` projection layout with the augmentation row last).
+    Spec-built indexes carry their family (core/family.py) and dispatch to
+    its asymmetric query transform; legacy indexes share the ``(d+1, L)``
+    projection layout with the augmentation row last (``P(q) = [q; 0]``).
     """
+    fam = getattr(index, "family", None)
+    if fam is not None:
+        return fam.encode_queries(index.params, queries, impl=impl)
     q = hashing.normalize(queries.astype(jnp.float32))
     zeros = jnp.zeros((q.shape[0],), q.dtype)
     return ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
 
 
+def _default_match(buckets: BucketIndex, impl: str):
+    """Packed-code match counter (legacy indexes): ``l = L - hamming``."""
+    return lambda q_codes, codes: ops.bucket_match(
+        q_codes, codes, buckets.hash_bits, impl=impl)
+
+
 def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
-                      num_probe: int, *, impl: str = "auto") -> jax.Array:
+                      num_probe: int, *, impl: str = "auto",
+                      match_fn=None) -> jax.Array:
     """(Q, num_probe) candidate item ids via bucket traversal.
 
-    Directory match -> per-bucket eq.-12 rank -> stable sort of B ranks ->
+    Directory match -> per-bucket probe rank -> stable sort of B ranks ->
     segmented gather of the first ``num_probe`` items. ``num_probe`` must
-    not exceed the item count.
+    not exceed the item count. ``match_fn`` overrides the packed-Hamming
+    match counter (family-specific codes).
     """
     num_probe = int(num_probe)
     assert num_probe <= buckets.num_items
-    matches = ops.bucket_match(q_codes, buckets.bucket_code,
-                               buckets.hash_bits, impl=impl)     # (Q, B)
+    if match_fn is None:
+        match_fn = _default_match(buckets, impl)
+    matches = match_fn(q_codes, buckets.bucket_code)             # (Q, B)
     bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
     order = jnp.argsort(bucket_rank, axis=-1, stable=True)       # (Q, B)
     # every bucket holds >= 1 item, so the first min(B, P) buckets cover
@@ -95,7 +111,8 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
 
 def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
                      db_codes: jax.Array, range_id: jax.Array,
-                     num_probe: int, *, impl: str = "auto") -> jax.Array:
+                     num_probe: int, *, impl: str = "auto",
+                     match_fn=None) -> jax.Array:
     """(Q, num_probe) candidate ids via the dense scan, in the same
     canonical ``(rank, CSR position)`` order as :func:`bucket_candidates`.
 
@@ -103,8 +120,9 @@ def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     used only for the rank table and the CSR tie-break layout.
     """
     num_probe = int(num_probe)
-    matches = ops.bucket_match(q_codes, db_codes, buckets.hash_bits,
-                               impl=impl)                        # (Q, N)
+    if match_fn is None:
+        match_fn = _default_match(buckets, impl)
+    matches = match_fn(q_codes, db_codes)                        # (Q, N)
     item_rank = buckets.rank[range_id[None, :], matches]
     # reorder columns to CSR so the stable argsort ties on CSR position
     rank_csr = item_rank[:, buckets.item_ids]
@@ -116,7 +134,8 @@ class QueryEngine:
     """Batched candidate generation + exact re-rank over one index.
 
     Args:
-      index:   RangeLSHIndex / SimpleLSHIndex / VocabIndex.
+      index:   spec-built ComposedIndex (any family, DESIGN.md §10) or a
+               legacy RangeLSHIndex / SimpleLSHIndex / VocabIndex.
       engine:  "dense" | "bucket" | "auto" (:func:`select_engine` picks by
                directory size vs item count). Both engines need the store
                (dense uses its rank table + CSR tie-break layout), so
@@ -146,14 +165,30 @@ class QueryEngine:
             return self.index.range_id
         return jnp.zeros((self.index.codes.shape[0],), jnp.int32)
 
+    @property
+    def _match_fn(self):
+        """Family-aware match counter; None keeps the packed default."""
+        fam = getattr(self.index, "family", None)
+        if fam is None:
+            return None
+        return lambda q_codes, codes: fam.match_counts(
+            self.index.params, q_codes, codes, self.index.hash_bits,
+            impl=self.impl)
+
     def candidates(self, queries: jax.Array, num_probe: int) -> jax.Array:
-        """(Q, num_probe) item ids in canonical eq.-12 probe order."""
+        """(Q, num_probe) item ids in canonical probe order."""
+        num_probe = int(num_probe)
+        if not 0 < num_probe <= self.buckets.num_items:
+            raise ValueError(f"num_probe={num_probe} outside "
+                             f"(0, N={self.buckets.num_items}]")
         q_codes = encode_queries(self.index, queries, impl=self.impl)
         if self.engine == "bucket":
             return bucket_candidates(self.buckets, q_codes, num_probe,
-                                     impl=self.impl)
+                                     impl=self.impl,
+                                     match_fn=self._match_fn)
         return dense_candidates(self.buckets, q_codes, self.index.codes,
-                                self._range_id, num_probe, impl=self.impl)
+                                self._range_id, num_probe, impl=self.impl,
+                                match_fn=self._match_fn)
 
     def query(self, queries: jax.Array, k: int, num_probe: int
               ) -> Tuple[jax.Array, jax.Array]:

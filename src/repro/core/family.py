@@ -1,0 +1,248 @@
+"""Pluggable hash families — the base ingredient of the composable index
+API (DESIGN.md §10).
+
+The paper's §5 observation (and the authors' follow-up "Norm-Range
+Partition: A Universal Catalyst for LSH based MIPS") is that norm-range
+partitioning composes with *any* base MIPS hash: partitioning, per-range
+normalization and the eq.-12 cross-range probe order are one reusable
+layer, and the base hash is another. This module defines the second layer
+as a :class:`HashFamily` contract:
+
+  * ``make_params``    — draw the data-independent hash parameters;
+  * ``encode_items``   — hash items given each item's range upper bound
+    ``U_j`` (the *only* partition-dependent input a family sees);
+  * ``encode_queries`` — the family's asymmetric query transform + hash;
+  * ``match_counts``   — per-(query, code) match counts ``l`` (Hamming
+    complement for packed sign codes, equality count for integer hashes);
+  * ``score_table``    — the (R, n_hashes+1) inner-product estimate per
+    ``(range, l)`` pair, the generalized §3.3 similarity metric that
+    :mod:`repro.core.index` turns into the global probe order.
+
+Three families implement it: SRP/SIMPLE-LSH (eq. 8 + eq. 4), L2-ALSH
+(eq. 5 + eq. 2) and SIGN-ALSH. ``NormRangePartitioned``/``build`` in
+``core/index.py`` is the universal catalyst over any of them; the legacy
+modules (``simple_lsh``/``range_lsh``/``l2_alsh``/``sign_alsh``/
+``multi_table``) are kept as thin shims whose outputs are bit-identical.
+
+Families are frozen dataclasses (hashable, jit-static); parameters are
+plain array pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.probe import DEFAULT_EPS, similarity_estimate
+from repro.core.rho import RECOMMENDED_L2_ALSH
+from repro.kernels import ops
+
+SIGN_ALSH_RECOMMENDED_M = 2
+SIGN_ALSH_RECOMMENDED_U = 0.75
+
+
+@dataclasses.dataclass(frozen=True)
+class HashFamily:
+    """Base contract (see module docstring). Subclasses override all
+    methods; attributes are class-level constants:
+
+      name:               registry key ("simple" | "l2_alsh" | "sign_alsh").
+      packed:             True when codes are packed uint32 sign bits
+                          (Hamming matching, bucket/streaming kernels
+                          apply); False for integer hash rows.
+      charges_index_bits: the family's §4 code-budget protocol — True when
+                          ``ceil(log2 m)`` bits of the budget pay for the
+                          range id (SIMPLE-LSH/RANGE-LSH); ALSH baselines
+                          keep all bits (generous-to-baseline protocol).
+    """
+
+    name: str = ""
+    packed: bool = True
+    charges_index_bits: bool = False
+
+    def make_params(self, key: jax.Array, dim: int, n_hashes: int):
+        """Draw hash parameters for ``dim``-dimensional items."""
+        raise NotImplementedError
+
+    def encode_items(self, params, items: jax.Array,
+                     upper_per_item: jax.Array, *,
+                     impl: str = "auto") -> jax.Array:
+        """Hash items; ``upper_per_item[i]`` is U_j of item i's range (the
+        global max norm when un-partitioned)."""
+        raise NotImplementedError
+
+    def encode_queries(self, params, queries: jax.Array, *,
+                       impl: str = "auto") -> jax.Array:
+        raise NotImplementedError
+
+    def match_counts(self, params, q_codes: jax.Array, db_codes: jax.Array,
+                     n_hashes: int, *, impl: str = "auto") -> jax.Array:
+        """(Q, N) int32 number of matching hashes ``l`` out of n_hashes."""
+        raise NotImplementedError
+
+    def score_table(self, upper: jax.Array, n_hashes: int, *,
+                    eps: float = DEFAULT_EPS) -> jax.Array:
+        """(R, n_hashes+1) f32 estimated inner product per ``(range, l)``
+        pair — strictly increasing in ``l`` for fixed range, so the global
+        argsort of the flattened table is the cross-range probe order.
+        ``upper`` must be free of zeros (use ``effective_upper``)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SimpleLSHFamily(HashFamily):
+    """SIMPLE-LSH (Neyshabur & Srebro 2015): ``P(x) = [x; sqrt(1-||x||^2)]``
+    + sign random projection. Partitioned by the combinator this IS the
+    paper's RANGE-LSH; the index-bit charge is the §4 protocol."""
+
+    name: str = "simple"
+    packed: bool = True
+    charges_index_bits: bool = True
+
+    def make_params(self, key, dim, n_hashes):
+        return hashing.srp_projections(key, dim + 1, n_hashes)
+
+    def encode_items(self, params, items, upper_per_item, *, impl="auto"):
+        x = items / upper_per_item[:, None]
+        tail = jnp.sqrt(jnp.maximum(
+            0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
+        return ops.hash_encode(x, params[:-1], tail, params[-1], impl=impl)
+
+    def encode_queries(self, params, queries, *, impl="auto"):
+        q = hashing.normalize(queries.astype(jnp.float32))
+        zeros = jnp.zeros((q.shape[0],), q.dtype)
+        return ops.hash_encode(q, params[:-1], zeros, params[-1], impl=impl)
+
+    def match_counts(self, params, q_codes, db_codes, n_hashes, *,
+                     impl="auto"):
+        return n_hashes - ops.hamming_scan(q_codes, db_codes, impl=impl)
+
+    def score_table(self, upper, n_hashes, *, eps=DEFAULT_EPS):
+        ls = jnp.arange(n_hashes + 1, dtype=jnp.int32)
+        return similarity_estimate(upper[:, None], ls[None, :], n_hashes,
+                                   eps)
+
+
+class L2ALSHParams(NamedTuple):
+    a: jax.Array  # (d + m, K)
+    b: jax.Array  # (K,)
+
+
+@dataclasses.dataclass(frozen=True)
+class L2ALSHFamily(HashFamily):
+    """L2-ALSH (Shrivastava & Li 2014): ``P(x)=[Ux; ||Ux||^2; ...]`` +
+    the L2 LSH family (integer hashes). ``match_counts`` is an equality
+    count, so the bucket/streaming Hamming kernels do not apply
+    (``packed=False``); ``impl`` is accepted and ignored."""
+
+    name: str = "l2_alsh"
+    packed: bool = False
+    charges_index_bits: bool = False
+    m: int = RECOMMENDED_L2_ALSH.m
+    U: float = RECOMMENDED_L2_ALSH.U
+    r: float = RECOMMENDED_L2_ALSH.r
+
+    def make_params(self, key, dim, n_hashes):
+        a, b = hashing.l2_hash_params(key, dim + self.m, n_hashes, self.r)
+        return L2ALSHParams(a, b)
+
+    def encode_items(self, params, items, upper_per_item, *, impl="auto"):
+        x = items * (self.U / upper_per_item)[:, None]
+        px = hashing.l2_alsh_item_transform(x, self.m, 1.0)
+        return hashing.l2_hash(px, params.a, params.b, self.r)
+
+    def encode_queries(self, params, queries, *, impl="auto"):
+        q = hashing.l2_alsh_query_transform(queries, self.m)
+        return hashing.l2_hash(q, params.a, params.b, self.r)
+
+    def match_counts(self, params, q_codes, db_codes, n_hashes, *,
+                     impl="auto"):
+        return jnp.sum((q_codes[:, None, :] == db_codes[None, :, :])
+                       .astype(jnp.int32), axis=-1)
+
+    def score_table(self, upper, n_hashes, *, eps=DEFAULT_EPS):
+        """Invert eq. (3) to a distance estimate and solve eq. (6) for the
+        inner product given the range's scaling s_j = U / U_j (the §3.3
+        similarity-metric idea transplanted to L2-ALSH, DESIGN.md §2).
+        ``eps`` does not apply to integer hashes and is ignored."""
+        K = n_hashes
+        l_frac = jnp.arange(K + 1, dtype=jnp.float32) / K
+        p = jnp.clip(l_frac, 1.0 / (4 * K), 1.0 - 1e-4)
+        d_hat = _invert_l2_collision(p, self.r)            # (K+1,)
+        s = (self.U / upper)[:, None]                      # (R, 1)
+        tail = (s * upper[:, None]) ** (2 ** (self.m + 1))
+        return (1.0 + self.m / 4.0 + tail - d_hat[None, :] ** 2) / (2.0 * s)
+
+
+def _invert_l2_collision(p: jax.Array, r: float, iters: int = 50
+                         ) -> jax.Array:
+    """Distance d with F_r(d) = p (F_r monotone decreasing; bisection)."""
+    lo = jnp.full_like(p, 1e-4)
+    hi = jnp.full_like(p, 100.0)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        too_close = hashing.l2_collision_prob(mid, r) > p
+        lo = jnp.where(too_close, mid, lo)
+        hi = jnp.where(too_close, hi, mid)
+    return 0.5 * (lo + hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignALSHFamily(HashFamily):
+    """SIGN-ALSH (Shrivastava & Li, UAI 2015):
+    ``P(x) = [Ux; 1/2-||Ux||^2; ...]`` + sign random projection. Packed
+    codes, so the bucket store and streaming layer apply unchanged —
+    partitioned by the combinator this is the beyond-paper §5 extension."""
+
+    name: str = "sign_alsh"
+    packed: bool = True
+    charges_index_bits: bool = False
+    m: int = SIGN_ALSH_RECOMMENDED_M
+    U: float = SIGN_ALSH_RECOMMENDED_U
+
+    def make_params(self, key, dim, n_hashes):
+        return hashing.srp_projections(key, dim + self.m, n_hashes)
+
+    def encode_items(self, params, items, upper_per_item, *, impl="auto"):
+        x = items * (self.U / upper_per_item)[:, None]
+        px = hashing.sign_alsh_item_transform(x, self.m, 1.0)
+        return hashing.pack_bits(hashing.srp_hash(px, params))
+
+    def encode_queries(self, params, queries, *, impl="auto"):
+        q = hashing.sign_alsh_query_transform(queries, self.m)
+        return hashing.pack_bits(hashing.srp_hash(q, params))
+
+    def match_counts(self, params, q_codes, db_codes, n_hashes, *,
+                     impl="auto"):
+        return n_hashes - ops.hamming_scan(q_codes, db_codes, impl=impl)
+
+    def score_table(self, upper, n_hashes, *, eps=DEFAULT_EPS):
+        ls = jnp.arange(n_hashes + 1, dtype=jnp.int32)
+        return similarity_estimate(upper[:, None], ls[None, :], n_hashes,
+                                   eps)
+
+
+FAMILY_NAMES: Tuple[str, ...] = ("simple", "l2_alsh", "sign_alsh")
+
+
+def get_family(name: str, *, alsh_m=None, alsh_U=None, alsh_r=None
+               ) -> HashFamily:
+    """Resolve a family by registry name; ``alsh_*`` override the ALSH
+    transform order / scaling / quantization width (ignored by "simple")."""
+    if name == "simple":
+        return SimpleLSHFamily()
+    if name == "l2_alsh":
+        return L2ALSHFamily(
+            m=RECOMMENDED_L2_ALSH.m if alsh_m is None else int(alsh_m),
+            U=RECOMMENDED_L2_ALSH.U if alsh_U is None else float(alsh_U),
+            r=RECOMMENDED_L2_ALSH.r if alsh_r is None else float(alsh_r))
+    if name == "sign_alsh":
+        return SignALSHFamily(
+            m=SIGN_ALSH_RECOMMENDED_M if alsh_m is None else int(alsh_m),
+            U=SIGN_ALSH_RECOMMENDED_U if alsh_U is None else float(alsh_U))
+    raise ValueError(
+        f"unknown hash family {name!r}; expected one of {FAMILY_NAMES}")

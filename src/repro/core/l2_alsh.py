@@ -15,6 +15,13 @@ conservative.
 §5 extension (:func:`build_ranged`): partition by norm percentile and use a
 per-range scaling ``U_j`` so each sub-dataset satisfies ``||U_j x|| <= U``;
 eq. (13) then yields strictly smaller rho_j (verified in tests/benchmarks).
+
+This module is a thin deprecation shim over the composable index API:
+``build``/``build_ranged`` delegate to ``repro.core.index.build`` with
+``IndexSpec(family="l2_alsh", m=...)`` — the bespoke ranged code path
+lives in the ``NormRangePartitioned`` combinator now — and return the
+legacy :class:`L2ALSHIndex` tuple with bit-identical arrays. Prefer the
+spec API (DESIGN.md §10) in new code.
 """
 
 from __future__ import annotations
@@ -24,8 +31,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
-from repro.core.partition import effective_upper, partition_by_scheme
+from repro.core import index as spec_index
+from repro.core.family import L2ALSHFamily, L2ALSHParams
+from repro.core.index import IndexSpec
 from repro.core.rho import RECOMMENDED_L2_ALSH
 from repro.core.topk import rerank
 
@@ -57,100 +65,55 @@ class L2ALSHIndex(NamedTuple):
     r: float
 
 
-def _transform_and_hash(items: jax.Array, scale_per_item: jax.Array,
-                        m: int, a: jax.Array, b: jax.Array, r: float
-                        ) -> jax.Array:
-    x = items * scale_per_item[:, None]
-    px = hashing.l2_alsh_item_transform(x, m, 1.0)  # scaling already applied
-    return hashing.l2_hash(px, a, b, r)
+def _family(index: L2ALSHIndex) -> L2ALSHFamily:
+    return L2ALSHFamily(m=index.m, U=index.U, r=index.r)
+
+
+def _params(index: L2ALSHIndex) -> L2ALSHParams:
+    return L2ALSHParams(index.a, index.b)
+
+
+def _shim_build(items, key, code_len, num_ranges, scheme, m, U, r
+                ) -> L2ALSHIndex:
+    spec = IndexSpec(family="l2_alsh", code_len=code_len, m=num_ranges,
+                     scheme=scheme, alsh_m=m, alsh_U=U, alsh_r=r)
+    cidx = spec_index.build(spec, items, key, strict=False)
+    fam = cidx.family
+    # legacy tuples carry the *effective* upper and its scaling U / U_j
+    return L2ALSHIndex(cidx.items, cidx.norms, cidx.codes, cidx.params.a,
+                       cidx.params.b, cidx.range_id, fam.U / cidx.upper_eff,
+                       cidx.upper_eff, fam.m, fam.U, fam.r)
 
 
 def build(items: jax.Array, key: jax.Array, code_len: int, *,
           m: Optional[int] = None, U: Optional[float] = None,
           r: Optional[float] = None) -> L2ALSHIndex:
     """Plain L2-ALSH with the paper's recommended (m=3, U=0.83, r=2.5)."""
-    m = RECOMMENDED_L2_ALSH.m if m is None else m
-    U = RECOMMENDED_L2_ALSH.U if U is None else U
-    r = RECOMMENDED_L2_ALSH.r if r is None else r
-    norms = hashing.l2_norm(items)
-    max_norm = jnp.max(norms)
-    a, b = hashing.l2_hash_params(key, items.shape[-1] + m, code_len, r)
-    scale = jnp.asarray([U]) / max_norm                   # ||Ux|| <= U < 1
-    per_item = jnp.broadcast_to(scale, (items.shape[0],))
-    hashes = _transform_and_hash(items, per_item, m, a, b, r)
-    rid = jnp.zeros((items.shape[0],), jnp.int32)
-    return L2ALSHIndex(items, norms, hashes, a, b, rid, scale,
-                       max_norm[None], m, U, r)
+    return _shim_build(items, key, code_len, 1, "percentile", m, U, r)
 
 
 def build_ranged(items: jax.Array, key: jax.Array, code_len: int,
                  num_ranges: int, *, scheme: str = "percentile",
                  m: Optional[int] = None, U: Optional[float] = None,
                  r: Optional[float] = None) -> L2ALSHIndex:
-    """§5: norm-ranged L2-ALSH — per-range scaling U/U_j."""
-    m = RECOMMENDED_L2_ALSH.m if m is None else m
-    U = RECOMMENDED_L2_ALSH.U if U is None else U
-    r = RECOMMENDED_L2_ALSH.r if r is None else r
-    norms = hashing.l2_norm(items)
-    part = partition_by_scheme(norms, num_ranges, scheme)
-    upper = effective_upper(part)
-    a, b = hashing.l2_hash_params(key, items.shape[-1] + m, code_len, r)
-    scale = U / upper                                     # (R,)
-    per_item = scale[part.range_id]
-    hashes = _transform_and_hash(items, per_item, m, a, b, r)
-    return L2ALSHIndex(items, norms, hashes, a, b, part.range_id, scale,
-                       upper, m, U, r)
+    """§5: norm-ranged L2-ALSH — per-range scaling U/U_j (now realized by
+    the generic combinator; this shim only re-labels the result)."""
+    return _shim_build(items, key, code_len, num_ranges, scheme, m, U, r)
 
 
 def encode_queries(index: L2ALSHIndex, queries: jax.Array) -> jax.Array:
-    q = hashing.l2_alsh_query_transform(queries, index.m)
-    return hashing.l2_hash(q, index.a, index.b, index.r)
-
-
-def _invert_l2_collision(p: jax.Array, r: float, iters: int = 50
-                         ) -> jax.Array:
-    """Distance d with F_r(d) = p (F_r monotone decreasing; bisection)."""
-    lo = jnp.full_like(p, 1e-4)
-    hi = jnp.full_like(p, 100.0)
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        too_close = hashing.l2_collision_prob(mid, r) > p
-        lo = jnp.where(too_close, mid, lo)
-        hi = jnp.where(too_close, hi, mid)
-    return 0.5 * (lo + hi)
-
-
-def _score_table(index: L2ALSHIndex) -> jax.Array:
-    """(R, K+1) inner-product estimate per (range, match count).
-
-    The §3.3 similarity-metric idea transplanted to L2-ALSH (our
-    beyond-paper cross-range probe order, DESIGN.md §2): estimate the
-    collision probability p = l/K, invert eq. (3) to a distance d_hat, and
-    solve eq. (6) for the inner product given the range's scaling:
-
-        x.q = (1 + m/4 + (s_j u_j)^{2^{m+1}} - d_hat^2) / (2 s_j)
-
-    where s_j = U / U_j is the scaling applied to range j's items. For a
-    single range this is a monotone transform of l (identical order to
-    plain match-count ranking).
-    """
-    K = index.hashes.shape[1]
-    l_frac = jnp.arange(K + 1, dtype=jnp.float32) / K
-    p = jnp.clip(l_frac, 1.0 / (4 * K), 1.0 - 1e-4)
-    d_hat = _invert_l2_collision(p, index.r)               # (K+1,)
-    s = index.scale[:, None]                               # (R, 1)
-    tail = (s * index.upper[:, None]) ** (2 ** (index.m + 1))
-    return (1.0 + index.m / 4.0 + tail - d_hat[None, :] ** 2) / (2.0 * s)
+    return _family(index).encode_queries(_params(index), queries)
 
 
 def probe_scores(index: L2ALSHIndex, queries: jax.Array) -> jax.Array:
     """(Q, N) probe priority: estimated inner product from match counts
-    (scale-aware across norm ranges; see _score_table)."""
-    qh = encode_queries(index, queries)                   # (Q, K)
-    matches = jnp.sum(
-        (qh[:, None, :] == index.hashes[None, :, :]).astype(jnp.int32),
-        axis=-1)                                          # (Q, N)
-    table = _score_table(index)                           # (R, K+1)
+    (scale-aware across norm ranges; see ``L2ALSHFamily.score_table``)."""
+    fam = _family(index)
+    params = _params(index)
+    qh = fam.encode_queries(params, queries)              # (Q, K)
+    K = index.hashes.shape[1]
+    matches = fam.match_counts(params, qh, index.hashes, K)
+    table = fam.score_table(index.upper, K)               # (R, K+1)
     return table[index.range_id[None, :], matches]
 
 

@@ -13,6 +13,12 @@ single-probe RANGE-LSH vs SIMPLE-LSH). Here:
 
 Dense TPU realization: per table one packed Hamming scan; a bucket match
 is hamming == 0, so the scan reuses the same kernel as multi-probe.
+
+This module is a thin deprecation shim over the composable index API:
+``build`` delegates to ``repro.core.index.build`` with
+``IndexSpec(family="simple", num_tables=T)`` and the query surface wraps
+:class:`repro.core.index.ComposedMultiTable` (which also supports the
+ALSH families). Prefer the spec API (DESIGN.md §10) in new code.
 """
 
 from __future__ import annotations
@@ -22,9 +28,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
-from repro.core.partition import effective_upper, percentile_partition
-from repro.kernels import ops
+from repro.core import index as spec_index
+from repro.core.index import ComposedMultiTable, IndexSpec
 
 
 class MultiTableIndex(NamedTuple):
@@ -37,48 +42,36 @@ class MultiTableIndex(NamedTuple):
     ranged: bool
 
 
+def _composed(index: MultiTableIndex, impl: str) -> ComposedMultiTable:
+    """Re-wrap the legacy tuple for the generic single-probe engine.
+    ``norms``/``lower`` are placeholders — the query surface never reads
+    them, so recomputing per call would be wasted device work."""
+    spec = IndexSpec(family="simple", code_len=index.code_len,
+                     m=index.upper.shape[0] if index.ranged else 1,
+                     num_tables=index.codes.shape[0], impl=impl)
+    placeholder = jnp.zeros_like(index.upper)
+    return ComposedMultiTable(spec, index.items, placeholder, index.codes,
+                              index.range_id, index.upper, placeholder,
+                              tuple(index.As[t]
+                                    for t in range(index.As.shape[0])),
+                              index.code_len)
+
+
 def build(items: jax.Array, key: jax.Array, code_len: int, num_tables: int,
           *, num_ranges: int = 1, impl: str = "auto") -> MultiTableIndex:
-    norms = hashing.l2_norm(items)
-    ranged = num_ranges > 1
-    if ranged:
-        part = percentile_partition(norms, num_ranges)
-        upper = effective_upper(part)
-        rid = part.range_id
-    else:
-        upper = jnp.max(norms)[None]
-        rid = jnp.zeros((items.shape[0],), jnp.int32)
-    x = items / upper[rid][:, None]
-    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
-
-    keys = jax.random.split(key, num_tables)
-    codes = []
-    As = []
-    for t in range(num_tables):
-        A = hashing.srp_projections(keys[t], items.shape[-1] + 1, code_len)
-        codes.append(ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl))
-        As.append(A)
-    return MultiTableIndex(items, jnp.stack(codes), jnp.stack(As), rid,
-                           upper, code_len, ranged)
+    spec = IndexSpec(family="simple", code_len=code_len, m=num_ranges,
+                     num_tables=num_tables, impl=impl)
+    cidx = spec_index.build(spec, items, key, strict=False)
+    return MultiTableIndex(cidx.items, cidx.codes, jnp.stack(cidx.params),
+                           cidx.range_id, cidx.upper, code_len,
+                           num_ranges > 1)
 
 
 def candidate_scores(index: MultiTableIndex, queries: jax.Array, *,
                      impl: str = "auto") -> jax.Array:
     """(Q, N) score = #tables with an exact bucket match, norm-scaled for
     ranged indexes (0 => not a candidate)."""
-    q = hashing.normalize(queries)
-    zeros = jnp.zeros((q.shape[0],), q.dtype)
-    counts = jnp.zeros((q.shape[0], index.items.shape[0]), jnp.int32)
-    T = index.codes.shape[0]
-    for t in range(T):
-        A = index.As[t]
-        qc = ops.hash_encode(q, A[:-1], zeros, A[-1], impl=impl)
-        ham = ops.hamming_scan(qc, index.codes[t], impl=impl)
-        counts = counts + (ham == 0).astype(jnp.int32)
-    scores = counts.astype(jnp.float32)
-    if index.ranged:
-        scores = scores * index.upper[index.range_id][None, :]
-    return scores
+    return _composed(index, impl).candidate_scores(queries)
 
 
 def query(index: MultiTableIndex, queries: jax.Array, k: int, *,
@@ -87,16 +80,5 @@ def query(index: MultiTableIndex, queries: jax.Array, k: int, *,
     """Single-probe query: exact re-rank restricted to true candidates
     (score > 0). Returns (vals, ids, num_candidates (Q,)); slots beyond
     the candidate count come back as (-inf, -1)."""
-    scores = candidate_scores(index, queries, impl=impl)
-    n_cand = jnp.sum((scores > 0).astype(jnp.int32), axis=1)
-    order = jnp.argsort(-scores, axis=1, stable=True)
-    top = order[:, :max_candidates]                       # (Q, C)
-    top_scores = jnp.take_along_axis(scores, top, axis=1)
-    cand_vec = index.items[top]                           # (Q, C, d)
-    ip = jnp.einsum("qd,qcd->qc", queries.astype(jnp.float32),
-                    cand_vec.astype(jnp.float32))
-    ip = jnp.where(top_scores > 0, ip, -jnp.inf)
-    vals, pos = jax.lax.top_k(ip, k)
-    ids = jnp.take_along_axis(top, pos, axis=1)
-    ids = jnp.where(jnp.isfinite(vals), ids, -1)
-    return vals, ids, n_cand
+    return _composed(index, impl).query(queries, k,
+                                        max_candidates=max_candidates)

@@ -21,21 +21,27 @@ A single shared projection matrix ``A`` is used for all sub-datasets
 (hash functions are data-independent, so sharing is statistically
 equivalent to drawing per-sub-dataset projections and lets one kernel
 encode the whole dataset).
+
+This module is a thin deprecation shim over the composable index API:
+``build`` delegates to ``repro.core.index.build`` with
+``IndexSpec(family="simple", m=...)`` — RANGE-LSH *is*
+``NormRangePartitioned(SimpleLSH)`` — and returns the legacy
+:class:`RangeLSHIndex` tuple with bit-identical arrays. Prefer the spec
+API (DESIGN.md §10) in new code.
 """
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
-from repro.core.partition import Partition, effective_upper, partition_by_scheme
+from repro.core import index as spec_index
+from repro.core.family import SimpleLSHFamily
+from repro.core.index import IndexSpec, index_bits
 from repro.core.probe import DEFAULT_EPS, item_scores, probe_table
 from repro.core.topk import rerank
-from repro.kernels import ops
 
 
 class RangeLSHIndex(NamedTuple):
@@ -70,46 +76,37 @@ class RangeLSHIndex(NamedTuple):
         return self.upper.shape[0]
 
 
-def index_bits(m: int) -> int:
-    """Bits of the code budget consumed by the sub-dataset id (§4)."""
-    return max(0, math.ceil(math.log2(m))) if m > 1 else 0
-
-
 def build(items: jax.Array, key: jax.Array, code_len: int, m: int, *,
           scheme: str = "percentile", eps: float = DEFAULT_EPS,
           charge_index_bits: bool = True, impl: str = "auto"
           ) -> RangeLSHIndex:
-    """Algorithm 1. ``charge_index_bits=False`` gives all L bits to hashing
-    (used by ablations; the paper's protocol charges them)."""
-    norms = hashing.l2_norm(items)
-    part = partition_by_scheme(norms, m, scheme)
-    upper = effective_upper(part)
-    hash_bits = code_len - index_bits(m) if charge_index_bits else code_len
-    if hash_bits <= 0:
-        raise ValueError(f"code_len={code_len} too small for m={m} ranges")
-    # local normalization: x / U_j  (line 6 of Algorithm 1)
-    x = items / upper[part.range_id][:, None]
-    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
-    A = hashing.srp_projections(key, items.shape[-1] + 1, hash_bits)
-    codes = ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl)
-    return RangeLSHIndex(items, norms, codes, part.range_id, part.upper,
-                         part.lower, A, code_len, hash_bits, eps)
+    """Algorithm 1, via ``NormRangePartitioned(SimpleLSH)``.
+    ``charge_index_bits=False`` gives all L bits to hashing (used by
+    ablations; the paper's protocol charges them)."""
+    spec = IndexSpec(family="simple", code_len=code_len, m=m, scheme=scheme,
+                     eps=eps, charge_index_bits=charge_index_bits,
+                     impl=impl)
+    cidx = spec_index.build(spec, items, key, strict=False)
+    return RangeLSHIndex(cidx.items, cidx.norms, cidx.codes, cidx.range_id,
+                         cidx.upper, cidx.lower, cidx.params, code_len,
+                         cidx.hash_bits, eps)
 
 
 def encode_queries(index: RangeLSHIndex, queries: jax.Array, *,
                    impl: str = "auto") -> jax.Array:
-    q = hashing.normalize(queries)
-    zeros = jnp.zeros((q.shape[0],), q.dtype)
-    return ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
+    return SimpleLSHFamily().encode_queries(index.A, queries, impl=impl)
 
 
 def probe_scores(index: RangeLSHIndex, queries: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     """(Q, N) eq.-12 probe priority (higher = probed earlier)."""
+    fam = SimpleLSHFamily()
     q_codes = encode_queries(index, queries, impl=impl)
-    ham = ops.hamming_scan(q_codes, index.codes, impl=impl)
+    matches = fam.match_counts(index.A, q_codes, index.codes,
+                               index.hash_bits, impl=impl)
     # items always reference non-empty ranges, so index.upper is safe as-is.
-    return item_scores(index.upper, index.range_id, ham, index.hash_bits,
+    return item_scores(index.upper, index.range_id,
+                       index.hash_bits - matches, index.hash_bits,
                        index.eps)
 
 

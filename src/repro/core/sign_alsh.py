@@ -15,6 +15,12 @@ m = 2, U = 0.75.
 Probe order: plain Hamming ranking (un-ranged) or the eq.-12 metric with
 the per-range upper norms (ranged) — the collision probability is again
 monotone in the (transformed) angular similarity.
+
+This module is a thin deprecation shim over the composable index API:
+``build`` delegates to ``repro.core.index.build`` with
+``IndexSpec(family="sign_alsh", m=...)`` and returns the legacy
+:class:`SignALSHIndex` tuple with bit-identical arrays. Prefer the spec
+API (DESIGN.md §10) in new code.
 """
 
 from __future__ import annotations
@@ -24,14 +30,15 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
-from repro.core.partition import effective_upper, partition_by_scheme
+from repro.core import index as spec_index
+from repro.core.family import (SIGN_ALSH_RECOMMENDED_M,
+                               SIGN_ALSH_RECOMMENDED_U, SignALSHFamily)
+from repro.core.index import IndexSpec
 from repro.core.probe import DEFAULT_EPS, item_scores
 from repro.core.topk import rerank
-from repro.kernels import ops
 
-RECOMMENDED_M = 2
-RECOMMENDED_U = 0.75
+RECOMMENDED_M = SIGN_ALSH_RECOMMENDED_M
+RECOMMENDED_U = SIGN_ALSH_RECOMMENDED_U
 
 
 class SignALSHIndex(NamedTuple):
@@ -47,11 +54,8 @@ class SignALSHIndex(NamedTuple):
     eps: float
 
 
-def _encode_items(items, scale_per_item, m, A, impl):
-    x = items * scale_per_item[:, None]
-    px = hashing.sign_alsh_item_transform(x, m, 1.0)
-    bits = hashing.srp_hash(px, A)
-    return hashing.pack_bits(bits)
+def _family(index: SignALSHIndex) -> SignALSHFamily:
+    return SignALSHFamily(m=index.m, U=index.U)
 
 
 def build(items: jax.Array, key: jax.Array, code_len: int, *,
@@ -59,30 +63,24 @@ def build(items: jax.Array, key: jax.Array, code_len: int, *,
           m: int = RECOMMENDED_M, U: float = RECOMMENDED_U,
           eps: float = DEFAULT_EPS, impl: str = "auto") -> SignALSHIndex:
     """Plain (num_ranges=1) or norm-ranged SIGN-ALSH."""
-    norms = hashing.l2_norm(items)
-    if num_ranges > 1:
-        part = partition_by_scheme(norms, num_ranges, scheme)
-        upper = effective_upper(part)
-        rid = part.range_id
-    else:
-        upper = jnp.max(norms)[None]
-        rid = jnp.zeros((items.shape[0],), jnp.int32)
-    A = hashing.srp_projections(key, items.shape[-1] + m, code_len)
-    scale = (U / upper)[rid]
-    codes = _encode_items(items, scale, m, A, impl)
-    return SignALSHIndex(items, norms, codes, A, rid, upper, m, U,
-                         code_len, eps)
+    spec = IndexSpec(family="sign_alsh", code_len=code_len, m=num_ranges,
+                     scheme=scheme, eps=eps, impl=impl, alsh_m=m, alsh_U=U)
+    cidx = spec_index.build(spec, items, key, strict=False)
+    # legacy tuples carry the *effective* upper (scale needs nonzero U_j)
+    return SignALSHIndex(cidx.items, cidx.norms, cidx.codes, cidx.params,
+                         cidx.range_id, cidx.upper_eff, m, U, code_len, eps)
 
 
 def encode_queries(index: SignALSHIndex, queries: jax.Array) -> jax.Array:
-    q = hashing.sign_alsh_query_transform(queries, index.m)
-    return hashing.pack_bits(hashing.srp_hash(q, index.A))
+    return _family(index).encode_queries(index.A, queries)
 
 
 def probe_scores(index: SignALSHIndex, queries: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     qc = encode_queries(index, queries)
-    ham = ops.hamming_scan(qc, index.codes, impl=impl)
+    matches = _family(index).match_counts(index.A, qc, index.codes,
+                                          index.code_len, impl=impl)
+    ham = index.code_len - matches
     if index.upper.shape[0] == 1:
         return -ham.astype(jnp.float32)          # plain Hamming ranking
     return item_scores(index.upper, index.range_id, ham, index.code_len,

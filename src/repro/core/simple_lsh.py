@@ -9,6 +9,12 @@ projection (eq. 4). Query processing ranks items by Hamming distance
 The TPU-native realization keeps packed codes dense and scans them with the
 Hamming kernel; the probe *order* is identical to bucket-ordered probing
 (items in the same bucket share a Hamming distance; ties broken stably).
+
+This module is a thin deprecation shim over the composable index API:
+``build`` delegates to ``repro.core.index.build`` with
+``IndexSpec(family="simple", m=1)`` (the un-partitioned degenerate case)
+and returns the legacy :class:`SimpleLSHIndex` tuple with bit-identical
+arrays. Prefer the spec API (DESIGN.md §10) in new code.
 """
 
 from __future__ import annotations
@@ -18,10 +24,11 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
+from repro.core import index as spec_index
+from repro.core.family import SimpleLSHFamily
+from repro.core.index import IndexSpec
 from repro.core.probe import hamming_scores
 from repro.core.topk import rerank
-from repro.kernels import ops
 
 
 class SimpleLSHIndex(NamedTuple):
@@ -46,30 +53,28 @@ class SimpleLSHIndex(NamedTuple):
 
 def build(items: jax.Array, key: jax.Array, code_len: int, *,
           impl: str = "auto") -> SimpleLSHIndex:
-    """Build the index: global normalization + fused encode."""
-    norms = hashing.l2_norm(items)
-    U = jnp.max(norms)
-    x = items / U
-    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
-    A = hashing.srp_projections(key, items.shape[-1] + 1, code_len)
-    codes = ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl)
-    return SimpleLSHIndex(items, norms, codes, A, U, code_len)
+    """Build the index: global normalization + fused encode (the spec
+    API's m=1 flat case)."""
+    spec = IndexSpec(family="simple", code_len=code_len, m=1, impl=impl)
+    cidx = spec_index.build(spec, items, key)
+    return SimpleLSHIndex(cidx.items, cidx.norms, cidx.codes, cidx.params,
+                          cidx.upper[0], code_len)
 
 
 def encode_queries(index: SimpleLSHIndex, queries: jax.Array, *,
                    impl: str = "auto") -> jax.Array:
     """Hash queries with ``P(q) = [q; 0]`` (zero tail)."""
-    q = hashing.normalize(queries)
-    zeros = jnp.zeros((q.shape[0],), q.dtype)
-    return ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
+    return SimpleLSHFamily().encode_queries(index.A, queries, impl=impl)
 
 
 def probe_scores(index: SimpleLSHIndex, queries: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     """(Q, N) probe priority — plain Hamming ranking (higher = earlier)."""
+    fam = SimpleLSHFamily()
     q_codes = encode_queries(index, queries, impl=impl)
-    ham = ops.hamming_scan(q_codes, index.codes, impl=impl)
-    return hamming_scores(ham)
+    matches = fam.match_counts(index.A, q_codes, index.codes,
+                               index.code_len, impl=impl)
+    return hamming_scores(index.code_len - matches)
 
 
 def probe_order(index: SimpleLSHIndex, queries: jax.Array, *,

@@ -154,14 +154,23 @@ def bucket_arrays(buckets) -> Dict[str, jax.Array]:
 
 def build_streaming_vocab_index(unembed: jax.Array, key: jax.Array, *,
                                 code_len: int = 64, num_ranges: int = 16,
-                                true_vocab: Optional[int] = None, **kw):
+                                true_vocab: Optional[int] = None,
+                                spec=None, **kw):
     """A :class:`repro.streaming.MutableIndex` over the unembedding columns
-    (global id == token id for the initial vocabulary)."""
+    (global id == token id for the initial vocabulary).
+
+    ``spec`` (a :class:`repro.core.index.IndexSpec`) overrides
+    ``code_len``/``num_ranges`` and selects the hash family — any packed
+    family composes with the streaming layer (DESIGN.md §10)."""
     from repro import streaming
+    from repro.core import index as spec_index
 
     items = unembed.T.astype(jnp.float32)
     if true_vocab is not None:
         items = items[:true_vocab]
+    if spec is not None:
+        cidx = spec_index.build(spec, items, key)
+        return streaming.MutableIndex.from_composed(cidx, **kw)
     return streaming.build(items, key, code_len, num_ranges, **kw)
 
 

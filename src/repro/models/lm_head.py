@@ -34,9 +34,10 @@ import jax.numpy as jnp
 from repro import compat
 
 from repro.core import hashing
+from repro.core.family import SimpleLSHFamily
+from repro.core.index import index_bits
 from repro.core.partition import effective_upper, percentile_partition
 from repro.core.probe import DEFAULT_EPS, item_scores
-from repro.core.range_lsh import index_bits
 from repro.kernels import ops
 
 
@@ -66,10 +67,9 @@ def build_vocab_index(unembed: jax.Array, key: jax.Array, *,
     part = percentile_partition(norms, num_ranges)
     upper = effective_upper(part)
     hash_bits = code_len - index_bits(num_ranges)
-    x = items / upper[part.range_id][:, None]
-    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
-    A = hashing.srp_projections(key, items.shape[-1] + 1, hash_bits)
-    codes = ops.hash_encode(x, A[:-1], tail, A[-1], impl=impl)
+    fam = SimpleLSHFamily()
+    A = fam.make_params(key, items.shape[-1], hash_bits)
+    codes = fam.encode_items(A, items, upper[part.range_id], impl=impl)
     return VocabIndex(codes, part.range_id, part.upper, A, code_len,
                       hash_bits, eps)
 

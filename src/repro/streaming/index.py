@@ -34,10 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, range_lsh
-from repro.core.bucket_index import BucketIndex, rank_table
+from repro.core.bucket_index import BucketIndex, rank_from_scores
 from repro.core.engine import select_engine
+from repro.core.family import HashFamily, SimpleLSHFamily
 from repro.core.probe import DEFAULT_EPS
-from repro.kernels import ops
 from repro.streaming.delta import DeltaBuffer, directory_keys
 from repro.streaming.drift import (DEFAULT_MIN_SKEW_COUNT,
                                    DEFAULT_SKEW_RATIO, DriftMonitor)
@@ -132,9 +132,15 @@ class MutableIndex:
                  repartition_policy: str = "localized",
                  engine: str = "auto", impl: str = "auto",
                  csr: Optional[_CSR] = None,
-                 delta: Optional[DeltaBuffer] = None, tomb_csr: int = 0):
+                 delta: Optional[DeltaBuffer] = None, tomb_csr: int = 0,
+                 family: Optional[HashFamily] = None):
         if repartition_policy not in ("localized", "full"):
             raise ValueError(f"unknown policy {repartition_policy!r}")
+        self.family = SimpleLSHFamily() if family is None else family
+        if not self.family.packed:
+            raise ValueError(
+                f"streaming indexes need packed sign codes; family "
+                f"{self.family.name!r} produces integer hashes")
         self.items = jnp.asarray(items, jnp.float32)
         self._norms = np.asarray(norms, np.float32).copy()
         self._codes = np.asarray(codes, np.uint32).copy()
@@ -191,6 +197,24 @@ class MutableIndex:
                    edges=partition_edges(norms, index.num_ranges, scheme),
                    A=index.A, code_len=index.code_len,
                    hash_bits=index.hash_bits, eps=index.eps, **kw)
+
+    @classmethod
+    def from_composed(cls, cidx, **kw) -> "MutableIndex":
+        """Mount a spec-built :class:`repro.core.index.ComposedIndex` —
+        any packed family (SIMPLE-LSH / SIGN-ALSH), flat or ranged."""
+        norms = np.asarray(jax.device_get(cidx.norms))
+        return cls(items=cidx.items, norms=norms,
+                   codes=np.asarray(jax.device_get(cidx.codes)),
+                   range_id=np.asarray(jax.device_get(cidx.range_id)),
+                   live=np.ones((norms.shape[0],), bool),
+                   upper=np.asarray(jax.device_get(cidx.upper)),
+                   lower=np.asarray(jax.device_get(cidx.lower)),
+                   edges=partition_edges(norms, cidx.num_ranges,
+                                         cidx.spec.scheme),
+                   A=cidx.params, code_len=cidx.code_len,
+                   hash_bits=cidx.hash_bits, eps=cidx.eps,
+                   family=cidx.family,
+                   **{"impl": cidx.spec.impl, **kw})
 
     @classmethod
     def from_simple_lsh(cls, index, **kw) -> "MutableIndex":
@@ -326,10 +350,8 @@ class MutableIndex:
     # -- query ---------------------------------------------------------------
 
     def encode_queries(self, queries: jax.Array) -> jax.Array:
-        q = hashing.normalize(jnp.asarray(queries, jnp.float32))
-        zeros = jnp.zeros((q.shape[0],), q.dtype)
-        return ops.hash_encode(q, self.A[:-1], zeros, self.A[-1],
-                               impl=self.impl)
+        return self.family.encode_queries(
+            self.A, jnp.asarray(queries, jnp.float32), impl=self.impl)
 
     def candidates(self, queries: jax.Array, num_probe: int) -> jax.Array:
         """(Q, num_probe) global ids in canonical merged probe order.
@@ -413,6 +435,8 @@ class MutableIndex:
                                side="left").astype(np.int32)
 
     def _encode(self, vectors: jax.Array, rid: np.ndarray) -> np.ndarray:
+        """Encode a batch under the frozen hash family and current bounds
+        (rows padded to the block grid to reuse compiled shapes)."""
         n = int(vectors.shape[0])
         padn = max(_ENC_BLOCK, -(-n // _ENC_BLOCK) * _ENC_BLOCK)
         U = np.ones((padn,), np.float32)
@@ -421,11 +445,8 @@ class MutableIndex:
             vectors = jnp.concatenate(
                 [vectors, jnp.zeros((padn - n, vectors.shape[1]),
                                     vectors.dtype)])
-        x = vectors / jnp.asarray(U)[:, None]
-        tail = jnp.sqrt(jnp.maximum(
-            0.0, 1.0 - jnp.sum(jnp.square(x), axis=-1)))
-        codes = ops.hash_encode(x, self.A[:-1], tail, self.A[-1],
-                                impl=self.impl)
+        codes = self.family.encode_items(self.A, vectors, jnp.asarray(U),
+                                         impl=self.impl)
         return np.asarray(jax.device_get(codes))[:n]
 
     def _encode_rows(self, src: jax.Array, idx: np.ndarray,
@@ -469,6 +490,12 @@ class MutableIndex:
         self._push_csr()
         self._push_live()
 
+    def _rank_table(self) -> jax.Array:
+        """(R, L+1) probe ranks from the family score table under the
+        current bounds (eq.-12 order for SIMPLE-LSH/SIGN-ALSH)."""
+        return rank_from_scores(self.family.score_table(
+            jnp.asarray(self.upper), self.hash_bits, eps=self.eps))
+
     def _push_csr(self) -> None:
         c = self._csr
         self.buckets = BucketIndex(
@@ -476,8 +503,7 @@ class MutableIndex:
             bucket_start=jnp.asarray(c.bucket_start),
             bucket_rid=jnp.asarray(c.bucket_rid),
             bucket_code=jnp.asarray(c.bucket_code),
-            rank=rank_table(jnp.asarray(self.upper), self.hash_bits,
-                            self.eps),
+            rank=self._rank_table(),
             hash_bits=self.hash_bits, eps=self.eps)
         self.csr_bucket = jnp.asarray(c.csr_bucket)
         self.csr_codes = jnp.asarray(c.csr_codes)
@@ -628,9 +654,7 @@ class MutableIndex:
         self.num_repartitions += 1
 
     def _refresh_rank(self) -> None:
-        self.buckets = self.buckets._replace(
-            rank=rank_table(jnp.asarray(self.upper), self.hash_bits,
-                            self.eps))
+        self.buckets = self.buckets._replace(rank=self._rank_table())
 
 
 def build(items: jax.Array, key: jax.Array, code_len: int, m: int, *,

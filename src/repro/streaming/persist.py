@@ -32,8 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core.family import SignALSHFamily, SimpleLSHFamily
 from repro.streaming.delta import DeltaBuffer
 from repro.streaming.index import _CSR, MutableIndex
+
+# family registry for snapshots (manifest leaves are arrays, so the family
+# rides as a small integer; absent in pre-family snapshots => simple)
+_FAMILY_IDS = {"simple": 0, "sign_alsh": 1}
 
 _KEY_RE = re.compile(r"\['([^']*)'\]")
 
@@ -73,6 +78,11 @@ def index_tree(mindex: MutableIndex) -> Dict[str, Any]:
             "capacity": jnp.asarray(mindex.capacity, jnp.int32),
             "max_tombstones": jnp.asarray(mindex.max_tombstones, jnp.int32),
             "tomb_csr": jnp.asarray(mindex.tomb_csr, jnp.int32),
+            "family_id": jnp.asarray(
+                _FAMILY_IDS[mindex.family.name], jnp.int32),
+            "fam_m": jnp.asarray(getattr(mindex.family, "m", 0), jnp.int32),
+            "fam_U": jnp.asarray(getattr(mindex.family, "U", 0.0),
+                                 jnp.float32),
         },
     }
 
@@ -128,7 +138,13 @@ def load_index(directory: str, step: Optional[int] = None,
     delta.items = jnp.asarray(dl["items"])
     delta._sync()
     csr = _CSR(**{k: np.asarray(v) for k, v in cs.items()})
+    if int(meta.get("family_id", 0)) == _FAMILY_IDS["sign_alsh"]:
+        family = SignALSHFamily(m=int(meta["fam_m"]),
+                                U=float(meta["fam_U"]))
+    else:
+        family = SimpleLSHFamily()
     return MutableIndex(
+        family=family,
         items=st["items"], norms=np.asarray(st["norms"]),
         codes=np.asarray(st["codes"]), range_id=np.asarray(st["range_id"]),
         live=np.asarray(st["live"]), upper=np.asarray(meta["upper"]),

@@ -1,0 +1,328 @@
+"""Composable index API: spec validation, cross-family parity matrix,
+multi-table composition, streaming through spec-built indexes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing, l2_alsh, multi_table, range_lsh, \
+    sign_alsh, simple_lsh
+from repro.core.bucket_index import build_bucket_index, build_buckets, \
+    rank_from_scores, rank_table
+from repro.core.engine import QueryEngine
+from repro.core.index import ComposedMultiTable, IndexSpec, build, \
+    index_bits
+from repro.data.synthetic import make_dataset
+
+L = 16          # total code budget — short codes make buckets collide
+M = 8           # norm ranges for the ranged arms
+P = 60          # probe budget
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imagenet", jax.random.PRNGKey(0), n=400, d=16,
+                        num_queries=4)
+
+
+def legacy_build(family, ranged, items):
+    """The legacy per-module constructor for a (family, ranged) arm."""
+    if family == "simple":
+        if ranged:
+            return range_lsh.build(items, KEY, L, M)
+        return simple_lsh.build(items, KEY, L)
+    if family == "l2_alsh":
+        if ranged:
+            return l2_alsh.build_ranged(items, KEY, L, M)
+        return l2_alsh.build(items, KEY, L)
+    if ranged:
+        return sign_alsh.build(items, KEY, L, num_ranges=M)
+    return sign_alsh.build(items, KEY, L)
+
+
+def legacy_module(family, ranged):
+    if family == "simple":
+        return range_lsh if ranged else simple_lsh
+    return l2_alsh if family == "l2_alsh" else sign_alsh
+
+
+# -- straight-line pin -------------------------------------------------------
+
+
+def test_spec_build_matches_straightline_range_lsh(ds):
+    """Algorithm 1 written out with the hashing primitives (independent of
+    both the shims and the combinator) pins the spec build's semantics."""
+    from repro.core.partition import effective_upper, percentile_partition
+
+    spec = IndexSpec(family="simple", code_len=L, m=M)
+    cidx = build(spec, ds.items, KEY)
+    norms = hashing.l2_norm(ds.items)
+    part = percentile_partition(norms, M)
+    upper = effective_upper(part)
+    hash_bits = L - index_bits(M)
+    x = ds.items / upper[part.range_id][:, None]
+    A = hashing.srp_projections(KEY, ds.items.shape[-1] + 1, hash_bits)
+    codes = hashing.encode_packed(x, A, fused_simple=True)
+    assert cidx.hash_bits == hash_bits
+    np.testing.assert_array_equal(np.asarray(cidx.range_id),
+                                  np.asarray(part.range_id))
+    np.testing.assert_array_equal(np.asarray(cidx.upper),
+                                  np.asarray(part.upper))
+    np.testing.assert_array_equal(np.asarray(cidx.codes), np.asarray(codes))
+
+
+# -- cross-family parity matrix ----------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("ranged", [False, True], ids=["flat", "ranged"])
+@pytest.mark.parametrize("family", ["simple", "l2_alsh", "sign_alsh"])
+def test_parity_matrix(ds, family, ranged, impl):
+    """Acceptance: for each family x {flat, ranged} x {dense, bucket} x
+    {ref, pallas}, spec-built indexes return candidate sequences
+    bit-identical to the legacy constructors."""
+    spec = IndexSpec(family=family, code_len=L, m=M if ranged else 1,
+                     impl=impl)
+    cidx = build(spec, ds.items, KEY)
+    legacy = legacy_build(family, ranged, ds.items)
+
+    # raw arrays are bit-identical (same key, same math)
+    legacy_codes = legacy.codes if hasattr(legacy, "codes") else legacy.hashes
+    np.testing.assert_array_equal(np.asarray(cidx.codes),
+                                  np.asarray(legacy_codes))
+
+    # dense arm: the legacy module's probe order (item-id ties)
+    mod = legacy_module(family, ranged)
+    want = np.asarray(mod.probe_order(legacy, ds.queries))[:, :P]
+    got = np.asarray(cidx.candidates(ds.queries, P, engine="dense"))
+    np.testing.assert_array_equal(got, want)
+
+    # engine arms: canonical (rank, CSR position) candidate order
+    spec_buckets = build_bucket_index(cidx)
+    eng_spec = {e: QueryEngine(cidx, engine=e, buckets=spec_buckets,
+                               impl=impl)
+                for e in ("dense", "bucket")}
+    cd = np.asarray(eng_spec["dense"].candidates(ds.queries, P))
+    cb = np.asarray(eng_spec["bucket"].candidates(ds.queries, P))
+    np.testing.assert_array_equal(cd, cb)      # engine parity per family
+    if family != "l2_alsh":
+        # packed families: the legacy index drives the same engines
+        legacy_buckets = build_bucket_index(legacy) \
+            if family == "simple" else None
+        if legacy_buckets is not None:
+            for e in ("dense", "bucket"):
+                eng_leg = QueryEngine(legacy, engine=e,
+                                      buckets=legacy_buckets, impl=impl)
+                np.testing.assert_array_equal(
+                    np.asarray(eng_leg.candidates(ds.queries, P)),
+                    cd if e == "dense" else cb)
+
+    # end-to-end query parity (exact re-rank on identical candidates)
+    vals_l, ids_l = mod.query(legacy, ds.queries, 5, P)
+    vals_s, ids_s = cidx.query(ds.queries, 5, P, engine="dense")
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_l))
+    np.testing.assert_allclose(np.asarray(vals_s), np.asarray(vals_l))
+
+
+def test_rank_from_scores_matches_rank_table(ds):
+    """For the eq.-12 cosine table the generic rank builder reproduces the
+    legacy ProbeTable inverse exactly."""
+    cidx = build(IndexSpec(family="simple", code_len=L, m=M), ds.items, KEY)
+    got = rank_from_scores(cidx.table)
+    want = rank_table(cidx.upper_eff, cidx.hash_bits, cidx.eps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_l2_alsh_bucket_store_uses_family_rank(ds):
+    """The L2-ALSH probe order interleaves ranges by the inverted-collision
+    estimate, not the eq.-12 cosine — the bucket store must carry the
+    family's table (candidates above already check order parity)."""
+    cidx = build(IndexSpec(family="l2_alsh", code_len=L, m=M),
+                 ds.items, KEY)
+    b = build_bucket_index(cidx)
+    np.testing.assert_array_equal(
+        np.asarray(b.rank), np.asarray(rank_from_scores(cidx.table)))
+    assert b.bucket_code.dtype == cidx.codes.dtype  # int hashes, not packed
+
+
+# -- multi-table composition -------------------------------------------------
+
+
+@pytest.mark.parametrize("ranged", [False, True], ids=["flat", "ranged"])
+def test_multi_table_parity(ds, ranged):
+    spec = IndexSpec(family="simple", code_len=L, m=M if ranged else 1,
+                     num_tables=3)
+    cidx = build(spec, ds.items, KEY)
+    assert isinstance(cidx, ComposedMultiTable)
+    legacy = multi_table.build(ds.items, KEY, L, 3,
+                               num_ranges=M if ranged else 1)
+    np.testing.assert_array_equal(np.asarray(cidx.codes),
+                                  np.asarray(legacy.codes))
+    np.testing.assert_array_equal(
+        np.asarray(cidx.candidate_scores(ds.queries)),
+        np.asarray(multi_table.candidate_scores(legacy, ds.queries)))
+    vs, is_, ns = cidx.query(ds.queries, 5)
+    vl, il, nl = multi_table.query(legacy, ds.queries, 5)
+    np.testing.assert_array_equal(np.asarray(is_), np.asarray(il))
+    np.testing.assert_array_equal(np.asarray(ns), np.asarray(nl))
+
+
+def test_multi_table_sign_alsh(ds):
+    """Beyond the legacy module: multi-table composes with other families
+    (short codes so exact full-code matches exist at this N)."""
+    spec = IndexSpec(family="sign_alsh", code_len=4, m=M, num_tables=2)
+    cidx = build(spec, ds.items, KEY)
+    vals, ids, n_cand = cidx.query(ds.queries, 5)
+    assert ids.shape == (ds.queries.shape[0], 5)
+    assert int(jnp.max(n_cand)) > 0
+
+
+# -- spec validation ---------------------------------------------------------
+
+
+def test_spec_validation_errors():
+    ok = IndexSpec(family="simple", code_len=32, m=8)
+    assert ok.validate() is ok
+    cases = [
+        (dict(family="minhash"), "unknown hash family"),
+        (dict(scheme="kmeans"), "unknown partition scheme"),
+        (dict(engine="gpu"), "unknown engine"),
+        (dict(impl="cuda"), "unknown impl"),
+        (dict(code_len=0), "code_len must be"),
+        (dict(m=0), "norm ranges"),
+        (dict(num_tables=0), "num_tables"),
+        (dict(eps=1.5), "eps must be"),
+        (dict(num_tables=4, engine="bucket"), "no bucket store"),
+        (dict(code_len=5, m=64), "leaves"),           # index bits eat L
+        (dict(code_len=32, m=12), "not a power of two"),
+        (dict(alsh_m=0, family="l2_alsh"), "alsh_m"),
+        (dict(alsh_U=1.5, family="l2_alsh"), "alsh_U"),
+        (dict(alsh_r=-1.0, family="l2_alsh"), "alsh_r"),
+    ]
+    for kw, msg in cases:
+        spec = IndexSpec(**kw)
+        with pytest.raises(ValueError, match=msg):
+            spec.validate()
+
+
+def test_spec_validation_power_of_two_escapes():
+    """Non-power m is fine when index bits are not charged, and the legacy
+    shims stay permissive (strict=False)."""
+    IndexSpec(code_len=32, m=12, charge_index_bits=False).validate()
+    IndexSpec(family="l2_alsh", code_len=32, m=12).validate()
+    items = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+    idx = range_lsh.build(items, KEY, 32, 12)    # shim: no strict check
+    assert idx.num_ranges == 12
+    with pytest.raises(ValueError, match="not a power of two"):
+        build(IndexSpec(code_len=32, m=12), items, KEY)
+
+
+def test_query_time_validation(ds):
+    cidx = build(IndexSpec(family="simple", code_len=L, m=M), ds.items, KEY)
+    n = ds.items.shape[0]
+    with pytest.raises(ValueError, match="num_probe"):
+        cidx.query(ds.queries, 5, n + 1)
+    with pytest.raises(ValueError, match="num_probe"):
+        cidx.candidates(ds.queries, 0)
+    with pytest.raises(ValueError, match="k="):
+        cidx.query(ds.queries, 50, 10)
+    eng = QueryEngine(cidx, engine="bucket")
+    with pytest.raises(ValueError, match="num_probe"):
+        eng.candidates(ds.queries, n + 1)
+
+
+def test_index_bit_budget_via_spec():
+    """§4 protocol through the spec: charged index bits shrink hash_bits;
+    ALSH families keep the full budget by default."""
+    assert IndexSpec(m=32).index_bits == 5
+    assert IndexSpec(m=32).hash_bits == 32 - 5
+    assert IndexSpec(family="l2_alsh", m=32).hash_bits == 32
+    assert IndexSpec(family="sign_alsh", m=32).hash_bits == 32
+    assert IndexSpec(m=32, num_tables=4).hash_bits == 32  # per-table budget
+
+
+# -- streaming through spec-built indexes ------------------------------------
+
+
+def rebuild_candidates(mi, queries, num_probe):
+    """From-scratch oracle (mirrors tests/test_streaming.py): bucket store
+    over the live mutated set under frozen hashes / current bounds."""
+    rows = np.flatnonzero(mi._live)
+    n = mi.delta.count
+    slots = np.flatnonzero(mi.delta._live[:n])
+    codes = np.concatenate([mi._codes[rows], mi.delta._codes[slots]])
+    rid = np.concatenate([mi._rid[rows], mi.delta._rid[slots]])
+    gids = np.concatenate([rows, mi.store_size + slots]).astype(np.int32)
+    b = build_buckets(jnp.asarray(codes), jnp.asarray(rid),
+                      jnp.asarray(mi.upper), mi.hash_bits, mi.eps,
+                      rank=mi._rank_table())
+    from repro.core.engine import bucket_candidates
+    local = bucket_candidates(b, mi.encode_queries(queries), num_probe,
+                              impl="ref")
+    return gids[np.asarray(local)]
+
+
+@pytest.mark.parametrize("family", ["simple", "sign_alsh"])
+def test_streaming_through_spec(ds, family):
+    """Acceptance: insert/delete/compact/repartition work unchanged
+    through a spec-built ranged index of any packed family."""
+    from repro import streaming
+
+    spec = IndexSpec(family=family, code_len=12, m=4)
+    cidx = build(spec, ds.items, KEY)
+    mi = streaming.MutableIndex.from_composed(cidx, capacity=64,
+                                              max_tombstones=16)
+    pool = np.asarray(make_dataset("imagenet", jax.random.PRNGKey(9),
+                                   n=120, d=16, num_queries=1).items)
+    rng = np.random.RandomState(0)
+    ids = mi.insert(pool[:40])
+    mi.delete(ids[:10])
+    mi.delete(rng.choice(400, size=20, replace=False))
+    # overflow drift: a vector far above every bound forces repartition
+    mi.insert(pool[40:41] * 50.0)
+    mi.insert(pool[41:90])
+    mi.compact()
+    mi.insert(pool[90:])
+    assert mi.num_repartitions + mi.num_full_rebuilds >= 1
+    assert mi.num_compactions >= 1
+    for num_probe in (17, 120):
+        mi.engine = "bucket"
+        got = np.asarray(mi.candidates(ds.queries, num_probe))
+        np.testing.assert_array_equal(
+            got, rebuild_candidates(mi, ds.queries, num_probe))
+    # exact re-rank only returns live ids
+    vals, gids = mi.query(ds.queries, 5, 100)
+    live_vecs, live_ids = mi.live_vectors()
+    assert set(np.asarray(gids).ravel()) <= set(np.asarray(live_ids))
+
+
+def test_streaming_rejects_unpacked_family(ds):
+    from repro import streaming
+
+    cidx = build(IndexSpec(family="l2_alsh", code_len=L, m=4), ds.items,
+                 KEY)
+    with pytest.raises(ValueError, match="packed"):
+        streaming.MutableIndex.from_composed(cidx)
+
+
+def test_streaming_spec_persist_roundtrip(ds, tmp_path):
+    """Persistence round-trips the family (sign_alsh here): mounted index
+    answers bit-identically."""
+    from repro import streaming
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.streaming import persist
+
+    spec = IndexSpec(family="sign_alsh", code_len=12, m=4)
+    cidx = build(spec, ds.items, KEY)
+    mi = streaming.MutableIndex.from_composed(cidx, capacity=32)
+    mi.insert(np.asarray(ds.items[:8]) * 1.5)
+    mgr = CheckpointManager(str(tmp_path))
+    persist.save_index(mgr, 1, mi)
+    loaded = persist.load_index(str(tmp_path))
+    assert loaded.family.name == "sign_alsh"
+    assert loaded.family.m == mi.family.m
+    np.testing.assert_array_equal(
+        np.asarray(loaded.candidates(ds.queries, 50)),
+        np.asarray(mi.candidates(ds.queries, 50)))
