@@ -1,0 +1,101 @@
+"""Distributed serving benchmark: query throughput vs shard count.
+
+Measures the DistributedEngine (DESIGN.md §11) end-to-end — encode,
+per-shard traversal of the global canonical probe prefix, exact local
+re-rank, O(k * shards) merge — for the bucket-traversal and dense-scan
+arms at a fixed probe budget (both arms probe the identical canonical
+candidate set, so recall is fixed by construction and recorded once from
+the single-device engine).
+
+Shards are forced host devices (``--xla_force_host_platform_device_count``
+set below, effective only when this module initializes jax — standalone
+``python -m benchmarks.distributed_bench`` — otherwise shard counts
+degrade to what the running process has); they share one CPU's cores, so
+the numbers measure the *overhead* of the sharded path (collectives,
+replicated directory work) rather than real speedup — the scaling shape,
+not the wall-clock win.
+
+Writes ``BENCH_0004.json`` at the repo root (temp dir in smoke mode);
+runs in the CI benchmark-smoke step (``REPRO_BENCH_SMOKE=1``).
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules:                 # flags must precede jax init
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import json
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt, \
+    time_call
+from repro.core import topk
+from repro.core.distributed import DistributedEngine, build_sharded, \
+    shard_index
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K = 10
+
+if bench_smoke():                    # CI canary: toy sizes
+    N, Q, L, M, PROBE = 4_000, 16, 16, 32, 400
+else:
+    N, Q, L, M, PROBE = 60_000, 64, 16, 32, 6_000
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N,
+                      num_queries=Q)
+    spec = IndexSpec(family="simple", code_len=L, m=M)
+    key = jax.random.PRNGKey(7)
+
+    # single-device baseline + the fixed-recall anchor (every arm probes
+    # the identical canonical candidate set)
+    cidx = build(spec, ds.items, key)
+    _, truth = topk.exact_mips(ds.queries, ds.items, K)
+    out = {"bench": "distributed", "n": N, "num_queries": Q, "code_len": L,
+           "num_ranges": M, "k": K, "num_probe": PROBE,
+           "note": "forced host devices share one CPU: scaling shape, "
+                   "not wall-clock speedup", "arms": {}}
+    for eng_name in ("bucket", "dense"):
+        eng = QueryEngine(cidx, engine=eng_name)
+        us = time_call(lambda e=eng: e.query(ds.queries, K, PROBE))
+        _, ids = eng.query(ds.queries, K, PROBE)
+        rec = float(topk.recall_at(ids, truth))
+        out.setdefault("recall", round(rec, 4))
+        out["arms"][f"local_{eng_name}"] = {
+            "us": round(us, 1), "qps": round(Q * 1e6 / us, 1)}
+        emit(f"distributed_local_{eng_name}", us,
+             f"recall={fmt(rec, 3)}|qps={fmt(Q * 1e6 / us, 1)}")
+
+    shard_counts = [s for s in (1, 2, 4, 8) if s <= jax.device_count()]
+    for S in shard_counts:
+        sidx = build_sharded(spec, ds.items, key, S)
+        mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+        placed = shard_index(sidx, mesh)
+        for eng_name in ("bucket", "dense"):
+            eng = DistributedEngine(placed, mesh, engine=eng_name)
+            us = time_call(lambda e=eng: e.query(ds.queries, K, PROBE))
+            out["arms"][f"s{S}_{eng_name}"] = {
+                "shards": S, "us": round(us, 1),
+                "qps": round(Q * 1e6 / us, 1)}
+            emit(f"distributed_s{S}_{eng_name}", us,
+                 f"shards={S}|qps={fmt(Q * 1e6 / us, 1)}")
+
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("distributed_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

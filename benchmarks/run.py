@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.engine_bench",
     "benchmarks.streaming_bench",
     "benchmarks.catalyst_bench",
+    "benchmarks.distributed_bench",
     "benchmarks.lsh_decode",
 ]
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro import streaming
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import distributed, topk
+from repro.core.index import IndexSpec
 from repro.data.als import als_factorize, synthetic_ratings
 from repro.launch.mesh import make_local_mesh
 
@@ -45,18 +46,21 @@ def main() -> None:
     print(f"item norms: max/median = "
           f"{float(jnp.max(norms) / jnp.median(norms)):.2f}")
 
-    # 2. index (sharded across whatever devices exist locally)
+    # 2. index (spec-built, sharded across whatever devices exist locally)
     mesh = make_local_mesh()
-    index = distributed.build(state.items, jax.random.PRNGKey(2),
-                              code_len=32, num_ranges=32,
-                              num_shards=mesh.shape["data"])
+    spec = IndexSpec(family="simple", code_len=32, m=32, engine="bucket")
+    index = distributed.build_sharded(spec, state.items,
+                                      jax.random.PRNGKey(2),
+                                      mesh.shape["data"])
     index = distributed.shard_index(index, mesh)
 
-    # 3. serve a batch of user queries
+    # 3. serve a batch of user queries through the distributed engine
+    # (global budget: 400 per shard, matching the legacy per-shard scan)
+    engine = distributed.DistributedEngine(index, mesh)
     users = state.users[:64]
+    probe = min(index.num_items, 400 * mesh.shape["data"])
     t0 = time.time()
-    vals, ids = distributed.query(index, users, k=10,
-                                  num_probe_per_shard=400, mesh=mesh)
+    vals, ids = engine.query(users, k=10, num_probe=probe)
     jax.block_until_ready(vals)
     dt = (time.time() - t0) * 1e3
     _, truth = topk.exact_mips(users, state.items, 10)

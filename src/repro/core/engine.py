@@ -91,7 +91,11 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     match counter (family-specific codes).
     """
     num_probe = int(num_probe)
-    assert num_probe <= buckets.num_items
+    if not 0 < num_probe <= buckets.num_items:
+        # ValueError, not assert: the check must survive ``python -O``
+        # and match QueryEngine.candidates.
+        raise ValueError(f"num_probe={num_probe} outside "
+                         f"(0, N={buckets.num_items}]")
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
     matches = match_fn(q_codes, buckets.bucket_code)             # (Q, B)

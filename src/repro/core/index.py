@@ -358,12 +358,18 @@ def _partition(norms: jax.Array, spec: IndexSpec):
 
 
 def build(spec: IndexSpec, items: jax.Array, key: jax.Array, *,
-          strict: bool = True):
+          num_shards: Optional[int] = None, strict: bool = True):
     """Spec-driven index construction — the single entry point.
 
     Returns a :class:`ComposedIndex` (or :class:`ComposedMultiTable` when
-    ``spec.num_tables > 1``). ``strict=False`` relaxes only the
-    power-of-two rule on ``m`` (used by the legacy shims)."""
+    ``spec.num_tables > 1``). ``num_shards`` selects the shard-aligned
+    path instead: a :class:`repro.core.distributed.ShardedIndex` laid out
+    for contiguous placement over a mesh axis (DESIGN.md §11).
+    ``strict=False`` relaxes only the power-of-two rule on ``m`` (used by
+    the legacy shims)."""
+    if num_shards is not None:
+        from repro.core.distributed import build_sharded
+        return build_sharded(spec, items, key, num_shards, strict=strict)
     spec.validate(strict=strict)
     fam = spec.resolve_family()
     items = jnp.asarray(items)

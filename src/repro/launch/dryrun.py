@@ -313,9 +313,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
 
 def run_mips_cell(mesh_kind: str, out_dir: str = OUT_DIR) -> Dict[str, Any]:
-    """The paper's own workload: sharded RANGE-LSH MIPS serving."""
+    """The paper's own workload: sharded MIPS serving on the spec API
+    (DESIGN.md §11), bucket-traversal engine, abstractly lowered — the
+    data-dependent bucket count is assumed at ``n // 4`` (the short-code
+    collision regime the engine targets)."""
     from repro.core import distributed as dist
-    from repro.core.probe import DEFAULT_EPS
+    from repro.core.index import IndexSpec
 
     multi = mesh_kind == "multipod"
     mesh = make_production_mesh(multi_pod=multi)
@@ -330,36 +333,60 @@ def run_mips_cell(mesh_kind: str, out_dir: str = OUT_DIR) -> Dict[str, Any]:
                               "chips": chips}
     t0 = time.time()
     try:
-        W = ((L - 8) + 31) // 32   # 8 bits of the budget index 256 ranges
-        idx = dist.ShardedRangeLSH(
-            items=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        hb = L - 8                 # 8 bits of the budget index 256 ranges
+        W = (hb + 31) // 32
+        B = n // 4                 # assumed occupied-bucket count
+        spec = IndexSpec(family="simple", code_len=L, m=m,
+                         engine="bucket")
+        f32, i32 = jnp.float32, jnp.int32
+        idx = dist.ShardedIndex(
+            spec=spec,
+            params=jax.ShapeDtypeStruct((d + 1, hb), f32),
+            rank=jax.ShapeDtypeStruct((m, hb + 1), i32),
+            dir_code=jax.ShapeDtypeStruct((B, W), jnp.uint32),
+            dir_rid=jax.ShapeDtypeStruct((B,), i32),
+            dir_size=jax.ShapeDtypeStruct((B,), i32),
+            dir_shard=jax.ShapeDtypeStruct((B,), i32),
+            dir_local_start=jax.ShapeDtypeStruct((B,), i32),
+            items=jax.ShapeDtypeStruct((n, d), f32),
             codes=jax.ShapeDtypeStruct((n, W), jnp.uint32),
-            range_id=jax.ShapeDtypeStruct((n,), jnp.int32),
+            range_id=jax.ShapeDtypeStruct((n,), i32),
+            bucket_of=jax.ShapeDtypeStruct((n,), i32),
+            bucket_off=jax.ShapeDtypeStruct((n,), i32),
+            perm=jax.ShapeDtypeStruct((n,), i32),
             valid=jax.ShapeDtypeStruct((n,), jnp.bool_),
-            perm=jax.ShapeDtypeStruct((n,), jnp.int32),
-            upper=jax.ShapeDtypeStruct((m,), jnp.float32),
-            A=jax.ShapeDtypeStruct((d + 1, L - 8), jnp.float32),
-            code_len=L, hash_bits=L - 8, eps=DEFAULT_EPS)
+            num_shards=shards, rows_per_shard=n // shards,
+            num_items=n, hash_bits=hb)
 
         # §Perf hillclimb C: queries shard over 'model' (2D decomposition)
         # unless REPRO_MIPS_2D=0 selects the paper-faithful 1D baseline.
         q_axis = ("model" if os.environ.get("REPRO_MIPS_2D", "1") == "1"
                   else None)
 
-        def fn(items, codes, range_id, valid, perm, upper, A, queries):
-            index = dist.ShardedRangeLSH(items, codes, range_id, valid,
-                                         perm, upper, A, L, L - 8,
-                                         DEFAULT_EPS)
-            return dist.query(index, queries, k, probe, mesh, axis=dp,
-                              query_axis=q_axis)
+        def fn(params, rank, dir_code, dir_rid, dir_size, dir_shard,
+               dir_lstart, items, codes, range_id, bucket_of, bucket_off,
+               perm, valid, queries):
+            index = idx._replace(
+                params=params, rank=rank, dir_code=dir_code,
+                dir_rid=dir_rid, dir_size=dir_size, dir_shard=dir_shard,
+                dir_local_start=dir_lstart, items=items, codes=codes,
+                range_id=range_id, bucket_of=bucket_of,
+                bucket_off=bucket_off, perm=perm, valid=valid)
+            eng = dist.DistributedEngine(index, mesh, axis=dp,
+                                         query_axis=q_axis)
+            return eng.query(queries, k, probe)
 
         row = NamedSharding(mesh, P(dp))
         rep = NamedSharding(mesh, P())
         step = jax.jit(fn, in_shardings=(
-            NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp, None)),
-            row, row, row, rep, rep, rep))
-        args = (idx.items, idx.codes, idx.range_id, idx.valid, idx.perm,
-                idx.upper, idx.A,
+            rep, rep, rep, rep, rep, rep, rep,
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp, None)), row, row, row, row, row,
+            rep))
+        args = (idx.params, idx.rank, idx.dir_code, idx.dir_rid,
+                idx.dir_size, idx.dir_shard, idx.dir_local_start,
+                idx.items, idx.codes, idx.range_id, idx.bucket_of,
+                idx.bucket_off, idx.perm, idx.valid,
                 jax.ShapeDtypeStruct((nq, d), jnp.float32))
         lowered = step.lower(*args)
         t1 = time.time()

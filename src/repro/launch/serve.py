@@ -152,6 +152,29 @@ def bucket_arrays(buckets) -> Dict[str, jax.Array]:
                 bucket_code=buckets.bucket_code, rank=buckets.rank)
 
 
+def build_sharded_vocab_index(unembed: jax.Array, key: jax.Array, *,
+                              num_shards: int, spec=None,
+                              code_len: int = 64, num_ranges: int = 16,
+                              true_vocab: Optional[int] = None,
+                              align: str = "bucket"):
+    """A :class:`repro.core.distributed.ShardedIndex` over the unembedding
+    columns — the pod-scale LSH head (DESIGN.md §11). ``spec`` overrides
+    ``code_len``/``num_ranges`` and picks the family/engine; build with
+    ``num_shards == mesh.shape["model"]`` and hand it to
+    ``BatchedServer(sharded_index=...)``."""
+    from repro.core.distributed import build_sharded
+    from repro.core.index import IndexSpec
+
+    items = unembed.T.astype(jnp.float32)
+    if true_vocab is not None:
+        items = items[:true_vocab]
+    if spec is None:
+        spec = IndexSpec(family="simple", code_len=code_len, m=num_ranges,
+                         engine="bucket")
+    return build_sharded(spec, items, key, num_shards, align=align,
+                         strict=False)
+
+
 def build_streaming_vocab_index(unembed: jax.Array, key: jax.Array, *,
                                 code_len: int = 64, num_ranges: int = 16,
                                 true_vocab: Optional[int] = None,
@@ -180,6 +203,14 @@ class BatchedServer:
     ``streaming_index`` swaps the frozen LSH head for a mutable one and
     enables the :meth:`insert_tokens` / :meth:`delete_tokens` endpoints —
     catalog mutations are visible to the next decode step.
+
+    ``sharded_index`` (a ``build_sharded_vocab_index`` result built for
+    ``mesh.shape["model"]`` shards) serves the LSH head through the
+    distributed engine (DESIGN.md §11): the jitted step returns the
+    hidden state and the per-shard bucket traversal + O(k * shards)
+    merge runs as its own jitted collective. The streaming delta path is
+    not sharded — a mutable catalog stays replicated
+    (``streaming_index``, which takes precedence).
     """
 
     def __init__(self, cfg: ModelConfig, params, mesh: Mesh, *,
@@ -188,17 +219,34 @@ class BatchedServer:
                  vocab_index: Optional[Any] = None,
                  num_probe: int = 1024, engine: str = "dense",
                  streaming_index: Optional[Any] = None,
+                 sharded_index: Optional[Any] = None,
                  token_map=None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.max_seq = max_seq
         self.batch = batch
-        self.lsh_decode = lsh_decode and streaming_index is None
+        self.lsh_decode = lsh_decode and streaming_index is None \
+            and sharded_index is None
         self.vocab_index = vocab_index
         self.num_probe = num_probe
         self.engine = engine
         self.streaming_index = streaming_index
+        self.sharded_index = None
+        if sharded_index is not None and streaming_index is None:
+            from repro.core.distributed import (DistributedEngine,
+                                                shard_index)
+            if token_map is not None:
+                raise ValueError(
+                    "token_map applies to streaming_index; the sharded "
+                    "head decodes index ids as token ids directly, so "
+                    "build the index over vocab rows (id == token id)")
+            placed = shard_index(sharded_index, mesh, axis=MODEL_AXIS)
+            self.sharded_index = placed
+            self._dist = DistributedEngine(placed, mesh, axis=MODEL_AXIS)
+            self.decode_fn = make_decode_step(cfg, mesh,
+                                              return_hidden=True)
+            return
         if streaming_index is not None:
             # global index id -> embeddable token id. Identity is only
             # sound while every assigned id is a vocab row; an index that
@@ -287,6 +335,13 @@ class BatchedServer:
         _, ids = si.query(hidden.astype(jnp.float32), 1, self.num_probe)
         return self._token_map_dev[ids[:, 0]]
 
+    def _sharded_topk(self, hidden: jax.Array) -> jax.Array:
+        """Greedy token via the distributed LSH head (monotone final
+        softcaps commute with top-1; index ids == vocab rows)."""
+        probe = min(self.num_probe, self.sharded_index.num_items)
+        _, ids = self._dist.query(hidden.astype(jnp.float32), 1, probe)
+        return ids[:, 0].astype(jnp.int32)
+
     # -- generation ----------------------------------------------------------
 
     def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
@@ -299,6 +354,8 @@ class BatchedServer:
                    else self.params["unembed"])
         if self.streaming_index is not None:
             tok = self._streaming_topk(last_hidden)
+        elif self.sharded_index is not None:
+            tok = self._sharded_topk(last_hidden)
         elif self.lsh_decode:
             _, ids = lm_head.lsh_topk_tokens(
                 self.vocab_index, last_hidden, unembed, k=1,
@@ -317,6 +374,9 @@ class BatchedServer:
             if self.streaming_index is not None:
                 hidden, caches = self.decode_fn(*args)
                 tok = self._streaming_topk(hidden)
+            elif self.sharded_index is not None:
+                hidden, caches = self.decode_fn(*args)
+                tok = self._sharded_topk(hidden)
             elif self.lsh_decode:
                 (vals, ids), caches = self.decode_fn(*args,
                                                      self._vidx_arrays)

@@ -139,12 +139,13 @@ def exact_topk_tokens(hidden: jax.Array, unembed: jax.Array, k: int,
 def sharded_lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
                             unembed: jax.Array, mesh, *, k: int = 8,
                             num_probe_per_shard: int = 256,
-                            axis: str = "model"
+                            axis: str = "model", impl: str = "auto"
                             ) -> Tuple[jax.Array, jax.Array]:
     """Vocab-sharded LSH-decode (Algorithm 2 as one all-gather).
 
     index arrays and ``unembed`` must be sharded over ``axis`` on the vocab
-    dimension; ``hidden`` replicated across it. Returns replicated
+    dimension; ``hidden`` replicated across it. ``impl`` dispatches the
+    encode/scan kernels ("auto" = Pallas on TPU). Returns replicated
     (vals, ids) with *global* token ids.
     """
     from jax.sharding import PartitionSpec as P
@@ -156,8 +157,8 @@ def sharded_lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
     def local(codes, rid, upper, A, hid, unemb):
         q = hashing.normalize(hid.astype(jnp.float32))
         zeros = jnp.zeros((q.shape[0],), q.dtype)
-        qc = ops.hash_encode(q, A[:-1], zeros, A[-1], impl="ref")
-        ham = ops.hamming_scan(qc, codes, impl="ref")
+        qc = ops.hash_encode(q, A[:-1], zeros, A[-1], impl=impl)
+        ham = ops.hamming_scan(qc, codes, impl=impl)
         sc = item_scores(upper, rid, ham, index.hash_bits, index.eps)
         _, cand = jax.lax.top_k(sc, num_probe_per_shard)      # local ids
         cv = jnp.take(unemb, cand, axis=1)                    # (d, B, P)

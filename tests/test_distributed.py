@@ -1,5 +1,12 @@
-"""Distributed MIPS + vocab-sharded LSH head (1-device mesh in-process;
-an 8-device subprocess test validates real collectives)."""
+"""Distributed serving on the composable spec API (DESIGN.md §11).
+
+In-process tests run on a 1-device mesh; the full family x engine x
+shard-count parity matrix (plus uneven/tiny shards) runs 8-way in a
+subprocess, since the host device count is locked at jax init. The CI
+workflow additionally runs this whole file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the in-process
+tests also exercise real multi-shard collectives.
+"""
 
 import os
 import subprocess
@@ -12,18 +19,28 @@ import numpy as np
 import pytest
 
 from repro.core import distributed, range_lsh, topk
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
 from repro.launch.mesh import make_local_mesh
+
+KEY = jax.random.PRNGKey(3)
+
+
+# -- legacy shim surface (seed API preserved) ---------------------------------
 
 
 def test_sharded_matches_local_quality(longtail_ds):
-    """ShardedRangeLSH on a 1-shard mesh == the plain RangeLSH engine."""
+    """Legacy shim on the local mesh == the single-device RangeLSH engine
+    at the same global probe budget."""
     items, queries = longtail_ds.items, longtail_ds.queries[:8]
     mesh = make_local_mesh()
-    idx = distributed.build(items, jax.random.PRNGKey(3), 32, 16, 1)
+    shards = mesh.shape["data"]
+    idx = distributed.build(items, jax.random.PRNGKey(3), 32, 16, shards)
     idx = distributed.shard_index(idx, mesh)
     vals, ids = distributed.query(idx, queries, 10, 400, mesh)
     ri = range_lsh.build(items, jax.random.PRNGKey(3), 32, 16)
-    lvals, lids = range_lsh.query(ri, queries, 10, 400)
+    budget = min(items.shape[0], 400 * shards)
+    lvals, lids = range_lsh.query(ri, queries, 10, budget)
     _, truth = topk.exact_mips(queries, items, 10)
     rec_d = float(topk.recall_at(ids, truth))
     rec_l = float(topk.recall_at(lids, truth))
@@ -36,7 +53,8 @@ def test_sharded_full_probe_is_exact(longtail_ds):
     items, queries = longtail_ds.items, longtail_ds.queries[:4]
     n = items.shape[0]
     mesh = make_local_mesh()
-    idx = distributed.build(items, jax.random.PRNGKey(0), 32, 8, 1)
+    idx = distributed.build(items, jax.random.PRNGKey(0), 32, 8,
+                            mesh.shape["data"])
     idx = distributed.shard_index(idx, mesh)
     vals, ids = distributed.query(idx, queries, 5, n, mesh)
     tvals, truth = topk.exact_mips(queries, items, 5)
@@ -46,50 +64,207 @@ def test_sharded_full_probe_is_exact(longtail_ds):
 
 
 def test_norm_sorted_layout_aligns_ranges_to_shards(longtail_ds):
-    """Partition-as-shard (DESIGN.md §3): with contiguous sharding, every
-    norm range's items are contiguous, so a shard holds whole ranges."""
+    """Shard-aligned layout (DESIGN.md §11): rows are in global CSR order
+    (range-major), so reading shards in order yields non-decreasing
+    range ids — every shard owns a contiguous run of norm ranges."""
     idx = distributed.build(longtail_ds.items, jax.random.PRNGKey(0), 32,
                             16, 4)
     rid = np.asarray(idx.range_id)[np.asarray(idx.valid)]
-    assert np.all(np.diff(rid) >= 0)   # sorted => contiguous ranges
+    assert np.all(np.diff(rid) >= 0)
+
+
+# -- shard-aligned layout invariants ------------------------------------------
+
+
+def test_shards_own_whole_buckets(longtail_ds):
+    """Every bucket's run fits inside its owner's valid rows, and bucket
+    sizes sum to N."""
+    spec = IndexSpec(family="simple", code_len=16, m=8)
+    sidx = build(spec, longtail_ds.items, KEY, num_shards=4)
+    sizes = np.asarray(sidx.dir_size)
+    shard = np.asarray(sidx.dir_shard)
+    lstart = np.asarray(sidx.dir_local_start)
+    counts = np.asarray(sidx.valid).reshape(
+        sidx.num_shards, sidx.rows_per_shard).sum(axis=1)
+    assert (lstart + sizes <= counts[shard]).all()
+    assert int(sizes.sum()) == sidx.num_items
+
+
+def test_range_alignment_owns_whole_ranges(longtail_ds):
+    """align="range": no norm range straddles a shard boundary."""
+    spec = IndexSpec(family="simple", code_len=16, m=8)
+    sidx = distributed.build_sharded(spec, longtail_ds.items, KEY, 4,
+                                     align="range")
+    rid = np.asarray(sidx.range_id)
+    valid = np.asarray(sidx.valid)
+    rows = sidx.rows_per_shard
+    owners = {}
+    for s in range(sidx.num_shards):
+        sl = slice(s * rows, (s + 1) * rows)
+        for r in np.unique(rid[sl][valid[sl]]):
+            assert owners.setdefault(int(r), s) == s
+    with pytest.raises(ValueError, match="align"):
+        distributed.build_sharded(spec, longtail_ds.items, KEY, 4,
+                                  align="diagonal")
+
+
+# -- single-device parity matrix (multi-shard arm runs in the subprocess) -----
+
+
+@pytest.mark.parametrize("engine", ["dense", "bucket"])
+@pytest.mark.parametrize("family", ["simple", "l2_alsh", "sign_alsh"])
+def test_distributed_parity_matrix(longtail_ds, family, engine):
+    """Acceptance: distributed merged (vals, ids) == single-device
+    ``QueryEngine.query`` on the same spec — ids bit-identical, vals to
+    f32-fusion tolerance (same candidates, different XLA fusion of the
+    re-rank einsum)."""
+    items, queries = longtail_ds.items, longtail_ds.queries[:6]
+    mesh = make_local_mesh()
+    shards = mesh.shape["data"]
+    spec = IndexSpec(family=family, code_len=16, m=8)
+    cidx = build(spec, items, KEY)
+    want_v, want_i = QueryEngine(cidx, engine=engine).query(queries, 10,
+                                                            200)
+    sidx = build(spec, items, KEY, num_shards=shards)
+    placed = distributed.shard_index(sidx, mesh)
+    eng = distributed.DistributedEngine(placed, mesh, engine=engine)
+    got_v, got_i = eng.query(queries, 10, 200)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_distributed_pallas_impl(longtail_ds):
+    """Regression for the seed-era hard-coded ``impl="ref"``: the Pallas
+    kernels (interpret mode on CPU) are reachable through the distributed
+    query path and agree with the reference."""
+    items, queries = longtail_ds.items[:500], longtail_ds.queries[:3]
+    mesh = make_local_mesh()
+    spec = IndexSpec(family="simple", code_len=16, m=8, impl="pallas")
+    sidx = build(spec, items, KEY, num_shards=mesh.shape["data"])
+    placed = distributed.shard_index(sidx, mesh)
+    outs = {}
+    for impl in ("pallas", "ref"):
+        eng = distributed.DistributedEngine(placed, mesh, engine="bucket",
+                                            impl=impl)
+        assert eng.impl == impl
+        outs[impl] = eng.query(queries, 5, 60)
+    np.testing.assert_array_equal(np.asarray(outs["pallas"][1]),
+                                  np.asarray(outs["ref"][1]))
+    np.testing.assert_array_equal(np.asarray(outs["pallas"][0]),
+                                  np.asarray(outs["ref"][0]))
+
+
+def test_distributed_query_validation(longtail_ds):
+    mesh = make_local_mesh()
+    spec = IndexSpec(family="simple", code_len=16, m=8)
+    sidx = build(spec, longtail_ds.items, KEY,
+                 num_shards=mesh.shape["data"])
+    placed = distributed.shard_index(sidx, mesh)
+    eng = distributed.DistributedEngine(placed, mesh)
+    n = sidx.num_items
+    with pytest.raises(ValueError, match="num_probe"):
+        eng.query(longtail_ds.queries[:2], 5, n + 1)
+    with pytest.raises(ValueError, match="k="):
+        eng.query(longtail_ds.queries[:2], 50, 10)
+    with pytest.raises(ValueError, match="shards"):
+        distributed.DistributedEngine(
+            build(spec, longtail_ds.items, KEY,
+                  num_shards=mesh.shape["data"] + 1), mesh)
+    with pytest.raises(ValueError, match="multi-table"):
+        build(IndexSpec(family="simple", code_len=16, num_tables=2),
+              longtail_ds.items, KEY, num_shards=2)
+
+
+# -- 8-way subprocess: the real-collective parity matrix ----------------------
 
 
 SUBPROCESS_TEST = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core import distributed, range_lsh, topk
-    from repro.launch.mesh import make_compat_mesh
-    mesh = make_compat_mesh((8,), ("data",))
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (2000, 24))
-    norms = jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (2000,)))
-    items = x / jnp.linalg.norm(x, axis=1, keepdims=True) * norms[:, None]
-    queries = jax.random.normal(jax.random.PRNGKey(2), (4, 24))
-    idx = distributed.build(items, jax.random.PRNGKey(3), 32, 16, 8)
-    idx = distributed.shard_index(idx, mesh)
-    vals, ids = distributed.query(idx, queries, 5, 2000 // 8, mesh)
-    tvals, truth = topk.exact_mips(queries, items, 5)
-    rec = float(topk.recall_at(ids, truth))
-    assert rec == 1.0, rec   # full probe budget => exact
-    np.testing.assert_allclose(np.asarray(vals), np.asarray(tvals),
-                               rtol=1e-4)
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import distributed
+    from repro.core.engine import QueryEngine
+    from repro.core.index import IndexSpec, build
+    from repro.data.synthetic import make_dataset
+
+    def mesh_of(s):
+        return Mesh(np.array(jax.devices()[:s]), ("data",))
+
+    def check(spec, items, queries, k, num_probe, shard_counts):
+        cidx = build(spec, items, jax.random.PRNGKey(3))
+        wv, wi = QueryEngine(cidx, engine="dense").query(queries, k,
+                                                         num_probe)
+        for S in shard_counts:
+            sidx = distributed.build_sharded(spec, items,
+                                             jax.random.PRNGKey(3), S)
+            placed = distributed.shard_index(sidx, mesh_of(S))
+            for e in ("dense", "bucket"):
+                eng = distributed.DistributedEngine(placed, mesh_of(S),
+                                                    engine=e)
+                gv, gi = eng.query(queries, k, num_probe)
+                np.testing.assert_array_equal(np.asarray(gi),
+                                              np.asarray(wi))
+                np.testing.assert_allclose(np.asarray(gv), np.asarray(wv),
+                                           rtol=2e-6, atol=2e-6)
+                assert (np.asarray(gi) >= 0).all()
+
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=400, d=16,
+                      num_queries=4)
+    for family in ("simple", "l2_alsh", "sign_alsh"):
+        check(IndexSpec(family=family, code_len=16, m=8), ds.items,
+              ds.queries, 10, 60, (2, 8))
+
+    # uneven N: shards get different item counts; padded rows masked
+    ds2 = make_dataset("imagenet", jax.random.PRNGKey(5), n=403, d=8,
+                       num_queries=3)
+    check(IndexSpec(family="simple", code_len=12, m=4), ds2.items,
+          ds2.queries, 7, 37, (8,))
+
+    # tiny: shards smaller than k must pad the merge with (-inf, -1),
+    # never leak ids
+    ds3 = make_dataset("imagenet", jax.random.PRNGKey(6), n=18, d=8,
+                       num_queries=3)
+    check(IndexSpec(family="simple", code_len=8, m=1), ds3.items,
+          ds3.queries, 5, 18, (8,))
+
+    # 2-D decomposition: queries over 'model', items over 'data'
+    mesh2d = Mesh(np.array(jax.devices()).reshape(4, 2),
+                  ("data", "model"))
+    spec = IndexSpec(family="simple", code_len=12, m=4)
+    cidx = build(spec, ds2.items, jax.random.PRNGKey(3))
+    wv, wi = QueryEngine(cidx, engine="dense").query(ds2.queries[:2], 7,
+                                                     37)
+    sidx = distributed.build_sharded(spec, ds2.items,
+                                     jax.random.PRNGKey(3), 4)
+    placed = distributed.shard_index(sidx, mesh2d, axis="data")
+    eng = distributed.DistributedEngine(placed, mesh2d, engine="bucket",
+                                        query_axis="model")
+    gv, gi = eng.query(ds2.queries[:2], 7, 37)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
     print("SUBPROCESS_OK")
 """)
 
 
-def test_sharded_query_on_8_devices():
-    """Real 8-way sharding in a subprocess (device count is locked at jax
-    init, so the main pytest process stays 1-device)."""
+def test_sharded_parity_on_8_devices():
+    """Real 8-way collectives in a subprocess (device count locks at jax
+    init, so the main pytest process stays 1-device): the full family x
+    engine x shard-count matrix plus uneven-shard, tiny-shard, and 2-D
+    decomposition regressions."""
     env = dict(os.environ,
                PYTHONPATH=os.pathsep.join(sys.path))
     out = subprocess.run([sys.executable, "-c", SUBPROCESS_TEST],
                          capture_output=True, text=True, env=env,
-                         timeout=300)
+                         timeout=560)
     assert "SUBPROCESS_OK" in out.stdout, out.stderr[-2000:]
 
 
-def test_vocab_sharded_lsh_head_matches_unsharded():
+# -- vocab-sharded LSH head ---------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_vocab_sharded_lsh_head_matches_unsharded(impl):
     from repro.models import lm_head
     mesh = make_local_mesh(model_parallel=1)
     # model axis of size 1: mesh ('data', 'model') => use 'model'
@@ -103,6 +278,7 @@ def test_vocab_sharded_lsh_head_matches_unsharded():
     v1, i1 = lm_head.lsh_topk_tokens(index, hidden, unembed, k=5,
                                      num_probe=256)
     v2, i2 = lm_head.sharded_lsh_topk_tokens(index, hidden, unembed, mesh,
-                                             k=5, num_probe_per_shard=256)
+                                             k=5, num_probe_per_shard=256,
+                                             impl=impl)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

@@ -128,6 +128,33 @@ def test_bucket_arrays_roundtrip(small_lm):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_batched_server_sharded_index(small_lm):
+    """Distributed-head server (DESIGN.md §11): full probe budget matches
+    the exact server greedy output; the decode step returns hidden states
+    and the sharded engine runs the merge collective."""
+    cfg, params = small_lm
+    mesh = make_local_mesh(model_parallel=1)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    sidx = serve.build_sharded_vocab_index(
+        unembed, jax.random.PRNGKey(5), code_len=32, num_ranges=8,
+        num_shards=mesh.shape["model"], true_vocab=cfg.vocab)
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 sharded_index=sidx,
+                                 num_probe=cfg.padded_vocab)
+    exact_server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out_sharded = server.generate(prompts, steps=3)
+    out_exact = exact_server.generate(prompts, steps=3)
+    np.testing.assert_array_equal(np.asarray(out_sharded),
+                                  np.asarray(out_exact))
+    # sharded head ids ARE token ids: a token_map is a category error
+    with pytest.raises(ValueError, match="token_map"):
+        serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                            sharded_index=sidx,
+                            token_map=np.zeros((4,), np.int32))
+
+
 def test_batched_server_streaming_head(small_lm):
     """Mutable-head server: full probe budget matches the exact server;
     delete_tokens bans a token from decoding; insert_tokens with a boosted

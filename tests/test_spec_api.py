@@ -231,6 +231,14 @@ def test_query_time_validation(ds):
     eng = QueryEngine(cidx, engine="bucket")
     with pytest.raises(ValueError, match="num_probe"):
         eng.candidates(ds.queries, n + 1)
+    # bucket_candidates raises ValueError itself (not a bare assert that
+    # ``python -O`` would strip) for direct callers like the decode head
+    from repro.core.engine import bucket_candidates, encode_queries
+    q_codes = encode_queries(cidx, ds.queries)
+    with pytest.raises(ValueError, match="num_probe"):
+        bucket_candidates(eng.buckets, q_codes, n + 1)
+    with pytest.raises(ValueError, match="num_probe"):
+        bucket_candidates(eng.buckets, q_codes, 0)
 
 
 def test_index_bit_budget_via_spec():
