@@ -1,0 +1,195 @@
+"""Recall-contract planner benchmark: static vs planned vs adaptive
+probing at fixed recall (DESIGN.md §12).
+
+The paper's headline is a speedup *at the same recall*; this benchmark
+measures the serving-side version of that claim on a long-tail synthetic
+dataset (the Fig-1b profile): for a 0.95@k=10 contract,
+
+  * **static** — the smallest global ``num_probe`` (geometric search,
+    factor 1.25) whose measured recall on held-out queries meets the
+    target: the operator-tuned baseline every surface used before the
+    planner;
+  * **planned** — per-range budgets from the calibrated greedy solve
+    (``planner.plan``), probed-candidate count ``sum_j min(b_j, n_j)``;
+  * **adaptive** — the same budgets with provable per-query early
+    termination (``planner.adaptive_query``), reporting *mean probes
+    actually used* (single-device arm only).
+
+Matrix: family (simple / l2_alsh / sign_alsh) x engine (dense / bucket)
+x shards (1 = single-device QueryEngine, 8 = DistributedEngine on forced
+host devices — scaling shape, not wall-clock speedup; the distributed
+planned merge is bit-identical to single-device, so recall is recorded
+once). Writes ``BENCH_0005.json`` at the repo root (temp dir in smoke
+mode); runs in the CI benchmark-smoke step (``REPRO_BENCH_SMOKE=1``).
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules:                 # flags must precede jax init
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import json
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt, \
+    time_call
+from repro.core import planner, topk
+from repro.core.distributed import DistributedEngine, build_sharded, \
+    shard_index
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K = 10
+TARGET = 0.95
+
+if bench_smoke():                    # CI canary: toy sizes
+    N, D, Q_CAL, Q_EVAL, L, M = 4_000, 24, 128, 32, 16, 16
+    SHARD_COUNTS = (8,)
+else:
+    N, D, Q_CAL, Q_EVAL, L, M = 30_000, 32, 256, 64, 16, 32
+    SHARD_COUNTS = (8,)
+
+FAMILIES = ("simple", "l2_alsh", "sign_alsh")
+
+
+def measured_recall(cand, truth) -> float:
+    return float(topk.recall_at(cand, truth))
+
+
+def smallest_static(eng: QueryEngine, queries, truth, start: int) -> int:
+    """Smallest global num_probe meeting TARGET on the eval queries
+    (geometric refinement, factor 1.25, downward then upward)."""
+    n = eng.buckets.num_items
+    npb = max(K, min(start, n))
+    while npb > K:
+        lower = max(K, int(npb / 1.25))
+        if measured_recall(eng.candidates(queries, lower), truth) \
+                < TARGET:
+            break
+        npb = lower
+    while npb < n and measured_recall(eng.candidates(queries, npb),
+                                      truth) < TARGET:
+        npb = min(n, int(math.ceil(npb * 1.25)))
+    return npb
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, d=D,
+                      num_queries=Q_CAL + Q_EVAL)
+    cal_q, eval_q = ds.queries[:Q_CAL], ds.queries[Q_CAL:]
+    out = {"bench": "planner", "n": N, "d": D, "code_len": L,
+           "num_ranges": M, "k": K, "recall_target": TARGET,
+           "calib_queries": Q_CAL, "eval_queries": Q_EVAL,
+           "note": "shards>1 on forced host devices: scaling shape, not "
+                   "wall-clock speedup; distributed planned merges are "
+                   "bit-identical to single-device so recall is recorded "
+                   "once per (family, engine)", "arms": {}}
+
+    for family in FAMILIES:
+        spec = IndexSpec(family=family, code_len=L, m=M,
+                         charge_index_bits=False)
+        key = jax.random.PRNGKey(7)
+        cidx = build(spec, ds.items, key, calibration_queries=cal_q,
+                     calibration_k=K)
+        pl = planner.plan(cidx.calib, TARGET)
+        _, truth = topk.exact_mips(eval_q, cidx.items, K)
+
+        for eng_name in ("bucket", "dense"):
+            eng = QueryEngine(cidx, engine=eng_name)
+            tag = f"{family}_{eng_name}"
+
+            static_np = smallest_static(eng, eval_q, truth,
+                                        start=max(pl.num_probe, 64))
+            rec_static = measured_recall(eng.candidates(eval_q, static_np),
+                                         truth)
+            us_static = time_call(
+                lambda e=eng, p=static_np: e.query(eval_q, K, p))
+
+            rec_planned = measured_recall(
+                eng.candidates(eval_q, budgets=pl.budgets), truth)
+            us_planned = time_call(
+                lambda e=eng, b=pl.budgets: e.query(eval_q, K, budgets=b))
+
+            _, _, used = planner.adaptive_query(eng, eval_q, K,
+                                                budgets=pl.budgets)
+            mean_used = float(np.mean(np.asarray(used)))
+            us_adapt = time_call(
+                lambda e=eng, b=pl.budgets: planner.adaptive_query(
+                    e, eval_q, K, budgets=b))
+
+            arm = {
+                "static": {"num_probe": static_np,
+                           "recall": round(rec_static, 4),
+                           "us": round(us_static, 1),
+                           "qps": round(Q_EVAL * 1e6 / us_static, 1)},
+                "planned": {"num_probe": pl.num_probe,
+                            "recall": round(rec_planned, 4),
+                            "predicted": round(pl.predicted_recall, 4),
+                            "nonzero_ranges": sum(
+                                1 for b in pl.budgets if b),
+                            "us": round(us_planned, 1),
+                            "qps": round(Q_EVAL * 1e6 / us_planned, 1)},
+                "adaptive": {"mean_probes": round(mean_used, 1),
+                             "recall": round(rec_planned, 4),
+                             "us": round(us_adapt, 1),
+                             "qps": round(Q_EVAL * 1e6 / us_adapt, 1)},
+                "probe_reduction_vs_static": round(
+                    1.0 - pl.num_probe / static_np, 4),
+            }
+            out["arms"][f"{tag}_s1"] = arm
+            emit(f"planner_{tag}_s1", us_planned,
+                 f"static={static_np}|planned={pl.num_probe}|"
+                 f"adaptive={fmt(mean_used, 1)}|recall="
+                 f"{fmt(rec_planned, 3)}")
+
+            for S in SHARD_COUNTS:
+                if S > jax.device_count():
+                    continue
+                sidx = build_sharded(spec, ds.items, key, S)
+                mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+                placed = shard_index(sidx, mesh)
+                deng = DistributedEngine(placed, mesh, engine=eng_name)
+                us_s = time_call(
+                    lambda e=deng, p=static_np: e.query(eval_q, K, p))
+                us_p = time_call(
+                    lambda e=deng, b=pl.budgets: e.query(eval_q, K,
+                                                         budgets=b))
+                out["arms"][f"{tag}_s{S}"] = {
+                    "shards": S,
+                    "static": {"num_probe": static_np,
+                               "us": round(us_s, 1),
+                               "qps": round(Q_EVAL * 1e6 / us_s, 1)},
+                    "planned": {"num_probe": pl.num_probe,
+                                "us": round(us_p, 1),
+                                "qps": round(Q_EVAL * 1e6 / us_p, 1)},
+                }
+                emit(f"planner_{tag}_s{S}", us_p,
+                     f"shards={S}|planned_qps={fmt(Q_EVAL * 1e6 / us_p, 1)}")
+
+    simple = out["arms"]["simple_bucket_s1"]
+    out["acceptance"] = {
+        "planned_recall": simple["planned"]["recall"],
+        "probe_reduction_vs_static":
+            simple["probe_reduction_vs_static"],
+        "meets": bool(simple["planned"]["recall"] >= TARGET - 0.005
+                      and simple["probe_reduction_vs_static"] >= 0.30),
+    }
+
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("planner_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.streaming_bench",
     "benchmarks.catalyst_bench",
     "benchmarks.distributed_bench",
+    "benchmarks.planner_bench",
     "benchmarks.lsh_decode",
 ]
 

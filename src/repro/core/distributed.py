@@ -57,7 +57,7 @@ from repro import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bucket_index import build_bucket_index, rank_from_scores
-from repro.core.engine import select_engine
+from repro.core.engine import planned_take, range_cum_before, select_engine
 from repro.core.index import ComposedMultiTable, IndexSpec, _check_probe
 from repro.core.index import build as build_spec
 from repro.core.probe import DEFAULT_EPS
@@ -101,6 +101,7 @@ class ShardedIndex(NamedTuple):
     rows_per_shard: int
     num_items: int
     hash_bits: int
+    calib: Optional[object] = None  # planner CalibrationTable (host-side)
 
     @property
     def num_buckets(self) -> int:
@@ -129,12 +130,18 @@ def _split_offsets(bounds: np.ndarray, n: int, num_shards: int
 
 def build_sharded(spec: IndexSpec, items: jax.Array, key: jax.Array,
                   num_shards: int, *, align: str = "bucket",
-                  strict: bool = True) -> ShardedIndex:
+                  strict: bool = True,
+                  calibration_queries: Optional[jax.Array] = None,
+                  calibration_k: Optional[int] = None) -> ShardedIndex:
     """Build the shard-aligned index for any spec (DESIGN.md §11).
 
     ``align="bucket"`` (default) splits at bucket boundaries balancing
     item counts; ``align="range"`` restricts cuts to norm-range
-    boundaries (whole ranges per shard, possibly less balanced).
+    boundaries (whole ranges per shard, possibly less balanced). Planner
+    calibration (a spec ``recall_target`` or explicit calibration
+    kwargs, DESIGN.md §12) happens on the pre-layout index — the
+    calibrated canonical order is what every shard traverses — and the
+    table rides replicated on the result.
     """
     num_shards = int(num_shards)
     if num_shards < 1:
@@ -142,7 +149,9 @@ def build_sharded(spec: IndexSpec, items: jax.Array, key: jax.Array,
     if align not in ALIGNMENTS:
         raise ValueError(f"unknown align {align!r}; "
                          f"expected one of {ALIGNMENTS}")
-    cidx = build_spec(spec, items, key, strict=strict)
+    cidx = build_spec(spec, items, key, strict=strict,
+                      calibration_queries=calibration_queries,
+                      calibration_k=calibration_k)
     if isinstance(cidx, ComposedMultiTable):
         raise ValueError("multi-table single-probe has no sharded path")
     buckets = build_bucket_index(cidx)
@@ -216,6 +225,7 @@ def build_sharded(spec: IndexSpec, items: jax.Array, key: jax.Array,
         rows_per_shard=rows,
         num_items=n,
         hash_bits=cidx.hash_bits,
+        calib=cidx.calib,
     )
 
 
@@ -264,10 +274,12 @@ def shard_index(index: ShardedIndex, mesh: Mesh, axis="data"
 def _shard_query(q_codes, queries, params, dir_code, dir_rid, dir_size,
                  dir_shard, dir_lstart, rank, items, codes, range_id,
                  bucket_of, bucket_off, perm, valid, *, family, hash_bits,
-                 num_probe, k, engine, impl, axis, axis_sizes, query_axis):
+                 num_probe, k, engine, impl, axis, axis_sizes, query_axis,
+                 budgets=None):
     """Per-shard body: global directory traversal -> local probe of the
-    owned slice of the canonical first-``num_probe`` items -> exact local
-    top-k -> Algorithm-2 all_gather merge."""
+    owned slice of the canonical first-``num_probe`` items (or, with
+    ``budgets``, of the planner's per-range prefixes totalling
+    ``num_probe``) -> exact local top-k -> Algorithm-2 all_gather merge."""
     my = jnp.int32(0)
     for a, s in zip(axis, axis_sizes):
         my = my * s + jax.lax.axis_index(a)
@@ -287,11 +299,18 @@ def _shard_query(q_codes, queries, params, dir_code, dir_rid, dir_size,
         # walk only the owned buckets' runs: O(B log B) directory work +
         # O(num_probe) gather, never the O(rows) item table. Every bucket
         # holds >= 1 item, so the first min(B, P) probe-ordered buckets
-        # cover the budget (the single-device slice, engine.py).
-        sel = order[:, :min(order.shape[1], num_probe)]
-        sizes_o = dir_size[sel]
-        cum = jnp.cumsum(sizes_o, axis=-1, dtype=jnp.int32)
-        take = jnp.clip(num_probe - (cum - sizes_o), 0, sizes_o)
+        # cover a global budget (the single-device slice, engine.py);
+        # per-range budgets can land anywhere, so they walk the full
+        # directory.
+        if budgets is not None:
+            sel = order
+            sizes_o = dir_size[sel]
+            take = planned_take(dir_rid[order], sizes_o, budgets)
+        else:
+            sel = order[:, :min(order.shape[1], num_probe)]
+            sizes_o = dir_size[sel]
+            cum = jnp.cumsum(sizes_o, axis=-1, dtype=jnp.int32)
+            take = jnp.clip(num_probe - (cum - sizes_o), 0, sizes_o)
         owned = dir_shard[sel] == my
         ltake = jnp.where(owned, take, 0)
         lcum = jnp.cumsum(ltake, axis=-1, dtype=jnp.int32)
@@ -306,20 +325,30 @@ def _shard_query(q_codes, queries, params, dir_code, dir_rid, dir_size,
             [starts_o, jnp.zeros((q_local, 1), jnp.int32)], axis=1)
         pos = ops.bucket_gather(cum2, starts2, width, impl=impl)
     else:
-        # dense arm: score every local row, keep rows whose global
-        # canonical position (items before its bucket + in-bucket offset)
-        # is under the budget — the same probed set as the bucket arm.
+        # dense arm: score every local row, keep rows whose canonical
+        # position (items before its bucket + in-bucket offset — global
+        # under a scalar budget, within-range under planned budgets) is
+        # under the budget — the same probed set as the bucket arm.
         # The position scatter needs the cumulative sizes of ALL buckets.
-        sizes_o = dir_size[order]
-        cum = jnp.cumsum(sizes_o, axis=-1, dtype=jnp.int32)
-        cum_prev = cum - sizes_o
         md = family.match_counts(params, q_codes, codes, hash_bits,
                                  impl=impl)                   # (Q, rows)
         irank = rank[range_id[None, :], md]
-        cpb = jnp.zeros_like(cum_prev).at[
-            jnp.arange(q_local)[:, None], order].set(cum_prev)
-        gpos = cpb[:, bucket_of] + bucket_off[None, :]
-        probed = valid[None, :] & (gpos < num_probe)
+        if budgets is not None:
+            crb = range_cum_before(dir_rid[order], dir_size[order],
+                                   len(budgets))
+            cpb = jnp.zeros_like(crb).at[
+                jnp.arange(q_local)[:, None], order].set(crb)
+            wpos = cpb[:, bucket_of] + bucket_off[None, :]
+            cap = jnp.asarray(budgets, jnp.int32)[range_id]
+            probed = valid[None, :] & (wpos < cap[None, :])
+        else:
+            sizes_o = dir_size[order]
+            cum = jnp.cumsum(sizes_o, axis=-1, dtype=jnp.int32)
+            cum_prev = cum - sizes_o
+            cpb = jnp.zeros_like(cum_prev).at[
+                jnp.arange(q_local)[:, None], order].set(cum_prev)
+            gpos = cpb[:, bucket_of] + bucket_off[None, :]
+            probed = valid[None, :] & (gpos < num_probe)
         key = jnp.where(probed, irank, jnp.iinfo(jnp.int32).max)
         order_l = jnp.argsort(key, axis=-1, stable=True)
         pos = order_l[:, :width]
@@ -395,12 +424,26 @@ class DistributedEngine:
         self.query_axis = query_axis
         self.family = index.spec.resolve_family()
         self._mapped_cache = {}
+        self._range_counts_cache = None
 
-    def _mapped(self, num_probe: int, k: int):
-        """Jitted shard_map per (num_probe, k) — repeat traffic (decode
-        steps, fixed-budget batches) hits the executable cache instead of
-        re-tracing the collective."""
-        key = (num_probe, k)
+    @property
+    def _range_counts(self) -> np.ndarray:
+        """Global per-range item counts from the replicated directory —
+        computed lazily: only the planned-budget path needs concrete
+        values, and dry-runs construct the engine from abstract arrays."""
+        if self._range_counts_cache is None:
+            idx = self.index
+            self._range_counts_cache = np.bincount(
+                np.asarray(jax.device_get(idx.dir_rid)),
+                weights=np.asarray(jax.device_get(idx.dir_size)),
+                minlength=idx.rank.shape[0]).astype(np.int64)
+        return self._range_counts_cache
+
+    def _mapped(self, num_probe: int, k: int, budgets=None):
+        """Jitted shard_map per (num_probe, k, budgets) — repeat traffic
+        (decode steps, fixed-budget batches) hits the executable cache
+        instead of re-tracing the collective."""
+        key = (num_probe, k, budgets)
         fn = self._mapped_cache.get(key)
         if fn is not None:
             return fn
@@ -410,7 +453,7 @@ class DistributedEngine:
             _shard_query, family=self.family, hash_bits=idx.hash_bits,
             num_probe=num_probe, k=k, engine=self.engine,
             impl=self.impl, axis=self.axis, axis_sizes=axis_sizes,
-            query_axis=self.query_axis)
+            query_axis=self.query_axis, budgets=budgets)
         q2 = P(self.query_axis, None) if self.query_axis \
             else P(None, None)
         row = P(self.axis)
@@ -426,18 +469,47 @@ class DistributedEngine:
         self._mapped_cache[key] = fn
         return fn
 
-    def query(self, queries: jax.Array, k: int, num_probe: int
-              ) -> Tuple[jax.Array, jax.Array]:
+    def query(self, queries: jax.Array, k: int,
+              num_probe: Optional[int] = None, *,
+              recall_target: Optional[float] = None,
+              budgets=None) -> Tuple[jax.Array, jax.Array]:
         """Distributed Algorithm 2 under a *global* probe budget: the
         probed union across shards is exactly the first ``num_probe``
         items of the single-device canonical order, so (vals, ids) —
         each (Q, k), replicated — are bit-identical to
-        ``QueryEngine.query`` on the same spec."""
+        ``QueryEngine.query`` on the same spec.
+
+        ``budgets`` / ``recall_target`` select the planner's per-range
+        contract instead (DESIGN.md §12): every shard derives the same
+        per-range takes from the replicated directory, so the probed
+        union is exactly the single-device *planned* candidate set and
+        the merge stays bit-identical to ``QueryEngine.query`` with the
+        same budgets."""
         idx = self.index
-        num_probe = _check_probe(num_probe, k, idx.num_items)
+        if recall_target is not None:
+            if num_probe is not None or budgets is not None:
+                raise ValueError(
+                    "pass one of num_probe/budgets/recall_target")
+            from repro.core.planner import resolve_budgets
+            budgets = resolve_budgets(idx.calib, recall_target,
+                                      k=k).budgets
+        if budgets is not None:
+            if num_probe is not None:
+                raise ValueError("pass one of num_probe/budgets")
+            from repro.core.engine import check_budgets
+            budgets, num_probe = check_budgets(budgets,
+                                               self._range_counts)
+            if not 0 < int(k) <= num_probe:
+                raise ValueError(f"k={k} outside (0, planned width "
+                                 f"{num_probe}]")
+        else:
+            if num_probe is None:
+                raise ValueError(
+                    "pass num_probe, budgets or recall_target")
+            num_probe = _check_probe(num_probe, k, idx.num_items)
         q_codes = self.family.encode_queries(idx.params, queries,
                                              impl=self.impl)
-        mapped = self._mapped(num_probe, int(k))
+        mapped = self._mapped(num_probe, int(k), budgets)
         # NOTE: re-rank uses the ORIGINAL queries (true inner products);
         # the family transform only affects the hash codes.
         return mapped(q_codes, queries, idx.params, idx.dir_code,

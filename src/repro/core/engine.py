@@ -31,10 +31,11 @@ integer-hash families (L2-ALSH) traverse buckets too.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hashing
 from repro.core.bucket_index import BucketIndex, build_bucket_index
@@ -113,6 +114,125 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     return buckets.item_ids[csr_pos]
 
 
+def check_budgets(budgets: Sequence[int], range_counts: np.ndarray
+                  ) -> Tuple[Tuple[int, ...], int]:
+    """Validate a per-range budget vector against the store's per-range
+    item counts; returns (clipped budgets, total planned width)."""
+    budgets = tuple(int(b) for b in budgets)
+    if len(budgets) != range_counts.shape[0]:
+        raise ValueError(f"{len(budgets)} budgets for "
+                         f"{range_counts.shape[0]} ranges")
+    if any(b < 0 for b in budgets):
+        raise ValueError(f"budgets must be >= 0, got {budgets}")
+    eff = tuple(min(b, int(c)) for b, c in zip(budgets, range_counts))
+    total = sum(eff)
+    if total <= 0:
+        raise ValueError("planned budgets probe zero items")
+    return eff, total
+
+
+def bucket_range_counts(buckets: BucketIndex) -> np.ndarray:
+    """(R,) per-range item counts from the bucket directory (host)."""
+    return np.bincount(
+        np.asarray(jax.device_get(buckets.bucket_rid)),
+        weights=np.asarray(jax.device_get(
+            buckets.bucket_start[1:] - buckets.bucket_start[:-1])),
+        minlength=buckets.rank.shape[0]).astype(np.int64)
+
+
+def range_cum_before(rid_o: jax.Array, sizes_o: jax.Array,
+                     num_ranges: int) -> jax.Array:
+    """(Q, B) cumulative same-range sizes before each probe-ordered slot
+    — THE within-range-position primitive every planned arm derives from
+    (one implementation, so bucket/dense/distributed cannot drift out of
+    the bit-identical contract). With unit sizes it is the within-range
+    probe position itself; an item at in-bucket offset ``o`` of the
+    bucket at slot ``s`` sits at within-range position
+    ``range_cum_before[s] + o``."""
+    crb = jnp.zeros_like(sizes_o)
+    for j in range(num_ranges):
+        mask = rid_o == j
+        sz_j = jnp.where(mask, sizes_o, 0)
+        crb = crb + jnp.where(
+            mask, jnp.cumsum(sz_j, axis=-1, dtype=jnp.int32) - sz_j, 0)
+    return crb
+
+
+def planned_take(rid_o: jax.Array, sizes_o: jax.Array,
+                 budgets: Sequence[int]) -> jax.Array:
+    """(Q, B) per-bucket take realizing per-range budgets over a
+    probe-ordered directory (the planner contract, DESIGN.md §12): each
+    bucket takes what is left of its range's budget after the same-range
+    buckets probed before it. Shared by the single-device bucket arm and
+    the distributed traversal."""
+    crb = range_cum_before(rid_o, sizes_o, len(budgets))
+    caps = jnp.asarray(budgets, jnp.int32)[rid_o]
+    return jnp.clip(caps - crb, 0, sizes_o)
+
+
+def planned_bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
+                              budgets: Sequence[int], *,
+                              impl: str = "auto", match_fn=None,
+                              range_counts: Optional[np.ndarray] = None
+                              ) -> jax.Array:
+    """(Q, sum_j min(b_j, n_j)) candidates under per-range probe budgets
+    (DESIGN.md §12): for each range j, the first ``min(b_j, n_j)`` items
+    of range j in canonical ``(rank, CSR position)`` order, emitted in
+    global canonical order. The directory walk computes, per bucket, how
+    much of its range's budget is left — zero-take buckets cost nothing
+    in the segmented gather. Pass ``range_counts`` (see
+    :func:`bucket_range_counts`) to skip the per-call host sync."""
+    if range_counts is None:
+        range_counts = bucket_range_counts(buckets)
+    budgets, total = check_budgets(budgets, range_counts)
+    if match_fn is None:
+        match_fn = _default_match(buckets, impl)
+    matches = match_fn(q_codes, buckets.bucket_code)             # (Q, B)
+    bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
+    order = jnp.argsort(bucket_rank, axis=-1, stable=True)       # (Q, B)
+    sizes_o = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[order]
+    starts = buckets.bucket_start[:-1][order]
+    take = planned_take(buckets.bucket_rid[order], sizes_o, budgets)
+    # every query's takes sum to exactly ``total`` (each range always
+    # contributes its full effective budget), so no covering run is needed
+    cum = jnp.concatenate(
+        [jnp.zeros((q_codes.shape[0], 1), jnp.int32),
+         jnp.cumsum(take, axis=-1, dtype=jnp.int32)], axis=-1)
+    csr_pos = ops.bucket_gather(cum, starts, total, impl=impl)
+    return buckets.item_ids[csr_pos]
+
+
+def planned_dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
+                             db_codes: jax.Array, range_id: jax.Array,
+                             budgets: Sequence[int], *,
+                             impl: str = "auto", match_fn=None,
+                             range_counts: Optional[np.ndarray] = None
+                             ) -> jax.Array:
+    """Dense-scan realization of the same per-range-budget contract as
+    :func:`planned_bucket_candidates` — identical candidate id sequences
+    (tested by the conformance suite)."""
+    if range_counts is None:
+        range_counts = np.bincount(
+            np.asarray(jax.device_get(range_id)),
+            minlength=buckets.rank.shape[0]).astype(np.int64)
+    budgets, total = check_budgets(budgets, range_counts)
+    if match_fn is None:
+        match_fn = _default_match(buckets, impl)
+    matches = match_fn(q_codes, db_codes)                        # (Q, N)
+    item_rank = buckets.rank[range_id[None, :], matches]
+    rank_csr = item_rank[:, buckets.item_ids]
+    order = jnp.argsort(rank_csr, axis=-1, stable=True)          # (Q, N)
+    rid_o = range_id[buckets.item_ids][order]
+    # unit sizes make range_cum_before the within-range probe position
+    wpos = range_cum_before(rid_o, jnp.ones_like(rid_o), len(budgets))
+    keep = wpos < jnp.asarray(budgets, jnp.int32)[rid_o]
+    # exactly ``total`` kept per query; stable sort pulls them to the
+    # front in canonical order
+    sel = jnp.argsort(~keep, axis=-1, stable=True)[:, :total]
+    csr_pos = jnp.take_along_axis(order, sel, axis=-1)
+    return buckets.item_ids[csr_pos]
+
+
 def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
                      db_codes: jax.Array, range_id: jax.Array,
                      num_probe: int, *, impl: str = "auto",
@@ -132,6 +252,32 @@ def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     rank_csr = item_rank[:, buckets.item_ids]
     order = jnp.argsort(rank_csr, axis=-1, stable=True)
     return buckets.item_ids[order[:, :num_probe]]
+
+
+# one-slot engine memo for the convenience surface (ComposedIndex.query /
+# candidates dispatch): repeat calls over the same index reuse the host-built
+# bucket store instead of paying the O(N log N) rebuild per call — the
+# recall-contract default path goes through here every query. The entry
+# holds a strong ref to the index, so the id() key can't be a stale reuse
+# (same pattern as distributed._shim_engine).
+_engine_memo: dict = {}
+
+
+def engine_for(index, *, engine: str, buckets=None,
+               impl: str = "auto") -> "QueryEngine":
+    """A :class:`QueryEngine` over ``index``, memoized one-slot when no
+    prebuilt ``buckets`` are supplied."""
+    if buckets is not None:
+        return QueryEngine(index, engine=engine, buckets=buckets,
+                           impl=impl)
+    key = (id(index), engine, impl)
+    ent = _engine_memo.get(key)
+    if ent is None:
+        eng = QueryEngine(index, engine=engine, impl=impl)
+        _engine_memo.clear()
+        _engine_memo[key] = (index, eng)
+        return eng
+    return ent[1]
 
 
 class QueryEngine:
@@ -162,12 +308,21 @@ class QueryEngine:
         self.engine = engine
         self.buckets = buckets
         self.impl = impl
+        self._range_counts_cache = None
 
     @property
     def _range_id(self) -> jax.Array:
         if hasattr(self.index, "range_id"):
             return self.index.range_id
         return jnp.zeros((self.index.codes.shape[0],), jnp.int32)
+
+    @property
+    def _range_counts(self) -> np.ndarray:
+        """Per-range item counts (host, computed once — the planned
+        paths validate budgets against them on every call)."""
+        if self._range_counts_cache is None:
+            self._range_counts_cache = bucket_range_counts(self.buckets)
+        return self._range_counts_cache
 
     @property
     def _match_fn(self):
@@ -179,13 +334,30 @@ class QueryEngine:
             self.index.params, q_codes, codes, self.index.hash_bits,
             impl=self.impl)
 
-    def candidates(self, queries: jax.Array, num_probe: int) -> jax.Array:
-        """(Q, num_probe) item ids in canonical probe order."""
+    def candidates(self, queries: jax.Array,
+                   num_probe: Optional[int] = None, *,
+                   budgets: Optional[Sequence[int]] = None) -> jax.Array:
+        """(Q, P) item ids in canonical probe order. ``num_probe`` probes
+        the global canonical prefix; ``budgets`` probes per-range prefixes
+        (the planner contract, DESIGN.md §12) with
+        ``P = sum_j min(b_j, n_j)``."""
+        if (num_probe is None) == (budgets is None):
+            raise ValueError("pass exactly one of num_probe/budgets")
+        q_codes = encode_queries(self.index, queries, impl=self.impl)
+        if budgets is not None:
+            if self.engine == "bucket":
+                return planned_bucket_candidates(
+                    self.buckets, q_codes, budgets, impl=self.impl,
+                    match_fn=self._match_fn,
+                    range_counts=self._range_counts)
+            return planned_dense_candidates(
+                self.buckets, q_codes, self.index.codes, self._range_id,
+                budgets, impl=self.impl, match_fn=self._match_fn,
+                range_counts=self._range_counts)
         num_probe = int(num_probe)
         if not 0 < num_probe <= self.buckets.num_items:
             raise ValueError(f"num_probe={num_probe} outside "
                              f"(0, N={self.buckets.num_items}]")
-        q_codes = encode_queries(self.index, queries, impl=self.impl)
         if self.engine == "bucket":
             return bucket_candidates(self.buckets, q_codes, num_probe,
                                      impl=self.impl,
@@ -194,9 +366,26 @@ class QueryEngine:
                                 self._range_id, num_probe, impl=self.impl,
                                 match_fn=self._match_fn)
 
-    def query(self, queries: jax.Array, k: int, num_probe: int
+    def query(self, queries: jax.Array, k: int,
+              num_probe: Optional[int] = None, *,
+              recall_target: Optional[float] = None,
+              budgets: Optional[Sequence[int]] = None
               ) -> Tuple[jax.Array, jax.Array]:
-        """Algorithm 2 end-to-end: probe ``num_probe`` items, exact
-        re-rank, return (vals, ids) (Q, k)."""
-        cand = self.candidates(queries, num_probe)
-        return rerank(queries, self.index.items, cand, k)
+        """Algorithm 2 end-to-end: probe, exact re-rank, return (vals,
+        ids) (Q, k). Exactly one of ``num_probe`` (static global budget),
+        ``budgets`` (per-range budgets) or ``recall_target`` (resolved to
+        budgets through the index's calibration table — the recall
+        contract) selects the probe set."""
+        if recall_target is not None:
+            if num_probe is not None or budgets is not None:
+                raise ValueError(
+                    "pass one of num_probe/budgets/recall_target")
+            from repro.core.planner import resolve_budgets
+            budgets = resolve_budgets(
+                getattr(self.index, "calib", None), recall_target,
+                k=k).budgets
+        cand = self.candidates(queries, num_probe, budgets=budgets)
+        if not 0 < int(k) <= cand.shape[1]:
+            raise ValueError(f"k={k} outside (0, probed width "
+                             f"{cand.shape[1]}]")
+        return rerank(queries, self.index.items, cand, int(k))

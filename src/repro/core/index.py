@@ -70,6 +70,10 @@ class IndexSpec:
       impl:      kernel dispatch ("auto" | "pallas" | "ref").
       num_tables: T > 1 builds multi-table single-probe (supplementary).
       eps:       eq.-12 slack.
+      recall_target: default recall contract (e.g. 0.95): ``build``
+                 calibrates the index offline (core/planner.py) and
+                 queries that pass no explicit budget are planned to meet
+                 this target.
       charge_index_bits: override the family's §4 protocol (None = family
                  default; multi-table never charges — the budget is per
                  table).
@@ -85,6 +89,7 @@ class IndexSpec:
     impl: str = "auto"
     num_tables: int = 1
     eps: float = DEFAULT_EPS
+    recall_target: Optional[float] = None
     charge_index_bits: Optional[bool] = None
     alsh_m: Optional[int] = None
     alsh_U: Optional[float] = None
@@ -149,6 +154,14 @@ class IndexSpec:
         if self.num_tables > 1 and self.engine == "bucket":
             raise ValueError("multi-table single-probe has no bucket "
                              "store; use engine='dense'")
+        if self.recall_target is not None:
+            if not 0.0 < self.recall_target <= 1.0:
+                raise ValueError(f"recall_target must be in (0, 1], got "
+                                 f"{self.recall_target}")
+            if self.num_tables > 1:
+                raise ValueError("multi-table single-probe has no probe "
+                                 "budget to plan; recall_target does not "
+                                 "apply")
         if self.charges and self.hash_bits <= 0:
             raise ValueError(
                 f"code_len={self.code_len} leaves {self.hash_bits} hash "
@@ -200,6 +213,9 @@ class ComposedIndex(NamedTuple):
                  global probe order is the descending argsort of its
                  flattened entries (generalized eq. 12).
       hash_bits: number of hash functions actually drawn.
+      calib:     optional :class:`repro.core.planner.CalibrationTable`
+                 (attached by ``build`` when the spec carries a
+                 ``recall_target``, or by ``planner.calibrate``).
     """
 
     spec: IndexSpec
@@ -213,6 +229,7 @@ class ComposedIndex(NamedTuple):
     params: object
     table: jax.Array
     hash_bits: int
+    calib: Optional[object] = None
 
     # -- static views --------------------------------------------------------
 
@@ -253,30 +270,64 @@ class ComposedIndex(NamedTuple):
         return jnp.argsort(-self.probe_scores(queries), axis=-1,
                            stable=True)
 
-    def candidates(self, queries: jax.Array, num_probe: int, *,
-                   engine: Optional[str] = None,
-                   buckets=None) -> jax.Array:
-        """(Q, num_probe) candidate ids. ``engine="dense"`` (with no
-        prebuilt ``buckets``) is the flat scan with item-id ties; any
-        other selection dispatches through :class:`QueryEngine` (canonical
-        CSR ties, identical candidate *sets*)."""
-        num_probe = _check_probe(num_probe, None, self.items.shape[0])
+    def candidates(self, queries: jax.Array,
+                   num_probe: Optional[int] = None, *,
+                   engine: Optional[str] = None, buckets=None,
+                   budgets=None) -> jax.Array:
+        """(Q, P) candidate ids. ``engine="dense"`` (with no prebuilt
+        ``buckets``) is the flat scan with item-id ties; any other
+        selection dispatches through :class:`QueryEngine` (canonical CSR
+        ties, identical candidate *sets*). ``budgets`` selects the
+        planner's per-range-prefix contract instead of the global prefix
+        (always canonical CSR ties)."""
         engine = self.spec.engine if engine is None else engine
-        if engine == "dense" and buckets is None:
-            return self.probe_order(queries)[:, :num_probe]
-        from repro.core.engine import QueryEngine
-        eng = QueryEngine(self, engine=engine, buckets=buckets,
-                          impl=self.spec.impl)
-        return eng.candidates(queries, num_probe)
+        if budgets is not None:
+            if num_probe is not None:
+                raise ValueError("pass one of num_probe/budgets")
+        else:
+            if num_probe is None:
+                raise ValueError("pass exactly one of num_probe/budgets")
+            num_probe = _check_probe(num_probe, None, self.items.shape[0])
+            if engine == "dense" and buckets is None:
+                return self.probe_order(queries)[:, :num_probe]
+        from repro.core.engine import engine_for
+        eng = engine_for(self, engine=engine, buckets=buckets,
+                         impl=self.spec.impl)
+        return eng.candidates(queries, num_probe, budgets=budgets)
 
-    def query(self, queries: jax.Array, k: int, num_probe: int, *,
-              engine: Optional[str] = None, buckets=None
+    def query(self, queries: jax.Array, k: int,
+              num_probe: Optional[int] = None, *,
+              engine: Optional[str] = None, buckets=None,
+              recall_target: Optional[float] = None, budgets=None
               ) -> Tuple[jax.Array, jax.Array]:
-        """Algorithm 2 end-to-end: probe ``num_probe`` items in global
-        order, exact re-rank, return (vals, ids) each (Q, k)."""
-        num_probe = _check_probe(num_probe, k, self.items.shape[0])
+        """Algorithm 2 end-to-end: probe, exact re-rank, return (vals,
+        ids) each (Q, k).
+
+        The probe set comes from ``num_probe`` (global canonical prefix),
+        ``budgets`` (per-range prefixes), or ``recall_target`` (planned
+        budgets from the calibration table). With none of the three, the
+        spec's ``recall_target`` is the contract — the planner's
+        serving-default path."""
+        if recall_target is None and num_probe is None and budgets is None:
+            recall_target = self.spec.recall_target
+        if recall_target is not None:
+            if num_probe is not None or budgets is not None:
+                raise ValueError(
+                    "pass one of num_probe/budgets/recall_target")
+            from repro.core.planner import resolve_budgets
+            budgets = resolve_budgets(self.calib, recall_target,
+                                      k=k).budgets
+        if budgets is None:
+            if num_probe is None:
+                raise ValueError(
+                    "pass num_probe, budgets or recall_target (or build "
+                    "from an IndexSpec with a recall_target)")
+            num_probe = _check_probe(num_probe, k, self.items.shape[0])
         cand = self.candidates(queries, num_probe, engine=engine,
-                               buckets=buckets)
+                               buckets=buckets, budgets=budgets)
+        if not 0 < int(k) <= cand.shape[1]:
+            raise ValueError(f"k={k} outside (0, probed width "
+                             f"{cand.shape[1]}]")
         return rerank(queries, self.items, cand, int(k))
 
 
@@ -358,7 +409,9 @@ def _partition(norms: jax.Array, spec: IndexSpec):
 
 
 def build(spec: IndexSpec, items: jax.Array, key: jax.Array, *,
-          num_shards: Optional[int] = None, strict: bool = True):
+          num_shards: Optional[int] = None, strict: bool = True,
+          calibration_queries: Optional[jax.Array] = None,
+          calibration_k: Optional[int] = None):
     """Spec-driven index construction — the single entry point.
 
     Returns a :class:`ComposedIndex` (or :class:`ComposedMultiTable` when
@@ -366,10 +419,19 @@ def build(spec: IndexSpec, items: jax.Array, key: jax.Array, *,
     path instead: a :class:`repro.core.distributed.ShardedIndex` laid out
     for contiguous placement over a mesh axis (DESIGN.md §11).
     ``strict=False`` relaxes only the power-of-two rule on ``m`` (used by
-    the legacy shims)."""
+    the legacy shims).
+
+    A spec with a ``recall_target`` (or explicit ``calibration_queries``/
+    ``calibration_k``) triggers offline planner calibration (DESIGN.md
+    §12): held-out queries — ``calibration_queries`` or standard-normal
+    samples drawn from ``key`` — are measured against brute-force ground
+    truth and the fitted :class:`~repro.core.planner.CalibrationTable`
+    rides on the index, powering ``query(recall_target=...)``."""
     if num_shards is not None:
         from repro.core.distributed import build_sharded
-        return build_sharded(spec, items, key, num_shards, strict=strict)
+        return build_sharded(spec, items, key, num_shards, strict=strict,
+                             calibration_queries=calibration_queries,
+                             calibration_k=calibration_k)
     spec.validate(strict=strict)
     fam = spec.resolve_family()
     items = jnp.asarray(items)
@@ -379,6 +441,9 @@ def build(spec: IndexSpec, items: jax.Array, key: jax.Array, *,
     upper_per_item = upper_eff[rid]
     dim = int(items.shape[-1])
     if spec.num_tables > 1:
+        if calibration_queries is not None or calibration_k is not None:
+            raise ValueError("multi-table single-probe has no probe "
+                             "budget to plan; calibration does not apply")
         keys = jax.random.split(key, spec.num_tables)
         params = tuple(fam.make_params(keys[t], dim, hash_bits)
                        for t in range(spec.num_tables))
@@ -390,5 +455,14 @@ def build(spec: IndexSpec, items: jax.Array, key: jax.Array, *,
     params = fam.make_params(key, dim, hash_bits)
     codes = fam.encode_items(params, items, upper_per_item, impl=spec.impl)
     table = fam.score_table(upper_eff, hash_bits, eps=spec.eps)
-    return ComposedIndex(spec, items, norms, codes, rid, upper, upper_eff,
+    cidx = ComposedIndex(spec, items, norms, codes, rid, upper, upper_eff,
                          lower, params, table, hash_bits)
+    if spec.recall_target is not None or calibration_queries is not None \
+            or calibration_k is not None:
+        from repro.core import planner
+        cidx = cidx._replace(calib=planner.calibrate(
+            cidx, calibration_queries,
+            k=(planner.DEFAULT_CAL_K if calibration_k is None
+               else int(calibration_k)),
+            key=jax.random.fold_in(key, 0x5ca1)))
+    return cidx

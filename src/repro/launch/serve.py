@@ -156,12 +156,20 @@ def build_sharded_vocab_index(unembed: jax.Array, key: jax.Array, *,
                               num_shards: int, spec=None,
                               code_len: int = 64, num_ranges: int = 16,
                               true_vocab: Optional[int] = None,
-                              align: str = "bucket"):
+                              align: str = "bucket",
+                              calibration_queries=None,
+                              calibration_k: Optional[int] = None):
     """A :class:`repro.core.distributed.ShardedIndex` over the unembedding
     columns — the pod-scale LSH head (DESIGN.md §11). ``spec`` overrides
     ``code_len``/``num_ranges`` and picks the family/engine; build with
     ``num_shards == mesh.shape["model"]`` and hand it to
-    ``BatchedServer(sharded_index=...)``."""
+    ``BatchedServer(sharded_index=...)``.
+
+    For a recall contract (``BatchedServer(recall_target=)``) pass
+    ``calibration_queries`` — real decode-time hidden states, the
+    serving distribution — so the planner's curves are measured on the
+    traffic they will govern (a spec ``recall_target`` alone calibrates
+    on synthetic standard-normal queries)."""
     from repro.core.distributed import build_sharded
     from repro.core.index import IndexSpec
 
@@ -172,7 +180,9 @@ def build_sharded_vocab_index(unembed: jax.Array, key: jax.Array, *,
         spec = IndexSpec(family="simple", code_len=code_len, m=num_ranges,
                          engine="bucket")
     return build_sharded(spec, items, key, num_shards, align=align,
-                         strict=False)
+                         strict=False,
+                         calibration_queries=calibration_queries,
+                         calibration_k=calibration_k)
 
 
 def build_streaming_vocab_index(unembed: jax.Array, key: jax.Array, *,
@@ -211,6 +221,11 @@ class BatchedServer:
     merge runs as its own jitted collective. The streaming delta path is
     not sharded — a mutable catalog stays replicated
     (``streaming_index``, which takes precedence).
+
+    ``recall_target`` states the serving contract instead of a probe
+    budget (DESIGN.md §12): the head index must carry planner
+    calibration, and the budget (per-range for the sharded head, scalar
+    for the streaming/frozen heads) is resolved once at construction.
     """
 
     def __init__(self, cfg: ModelConfig, params, mesh: Mesh, *,
@@ -220,7 +235,8 @@ class BatchedServer:
                  num_probe: int = 1024, engine: str = "dense",
                  streaming_index: Optional[Any] = None,
                  sharded_index: Optional[Any] = None,
-                 token_map=None):
+                 token_map=None,
+                 recall_target: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -233,6 +249,44 @@ class BatchedServer:
         self.engine = engine
         self.streaming_index = streaming_index
         self.sharded_index = None
+        # recall contract (DESIGN.md §12): resolve the serving budget from
+        # the head index's planner calibration once, at construction — the
+        # decode loop then runs the planned budget on the jit cache. The
+        # streaming head re-plans per step instead: its own inserts can
+        # flag the calibration stale mid-session, and the contract must
+        # fail loudly then, not silently serve the pre-drift budget.
+        self._budgets = None
+        self._recall_target = recall_target
+        if recall_target is not None:
+            head = (streaming_index if streaming_index is not None
+                    else sharded_index if sharded_index is not None
+                    else vocab_index if lsh_decode else None)
+            if head is None:
+                raise ValueError("recall_target needs an LSH head "
+                                 "(vocab_index/streaming_index/"
+                                 "sharded_index)")
+            from repro.core import planner
+            if streaming_index is not None:
+                # fail fast on a bad target / missing calibration; the
+                # budget itself is re-planned per decode step
+                # (_streaming_topk), so drift fails loudly mid-session
+                planner.check_target(recall_target)
+                if streaming_index.calib is None \
+                        or streaming_index.calib_stale:
+                    raise ValueError(
+                        "streaming_index carries no fresh calibration — "
+                        "planner.calibrate_streaming() + "
+                        "set_calibration() first")
+            elif sharded_index is not None:
+                self._budgets = planner.resolve_budgets(
+                    sharded_index.calib, recall_target).budgets
+            else:
+                if vocab_index is None or vocab_index.calib is None:
+                    raise ValueError(
+                        "recall_target needs a calibrated vocab_index "
+                        "(lm_head.calibrate_vocab_index)")
+                self.num_probe = planner.plan_global(
+                    vocab_index.calib, recall_target).num_probe
         if sharded_index is not None and streaming_index is None:
             from repro.core.distributed import (DistributedEngine,
                                                 shard_index)
@@ -286,9 +340,12 @@ class BatchedServer:
             from repro.core.bucket_index import build_bucket_index
             self._buckets = build_bucket_index(vocab_index)
             self._vidx_arrays.update(bucket_arrays(self._buckets))
+        # self.num_probe, not the ctor arg: a recall_target resolved the
+        # planned budget above, and the jitted step must honor it for
+        # every token, not just the prefill one
         self.decode_fn = make_decode_step(cfg, mesh, lsh_decode=lsh_decode,
                                           vocab_meta=meta,
-                                          num_probe=num_probe,
+                                          num_probe=self.num_probe,
                                           engine=engine)
 
     # -- streaming endpoints -------------------------------------------------
@@ -330,16 +387,30 @@ class BatchedServer:
         """Greedy token via the mutable head (monotone final softcaps
         commute with top-1, so the cap is skipped). ``query`` caps the
         budget structurally, so per-mutation traffic stays on the jit
-        cache."""
+        cache. Under a recall contract the target is re-planned per step
+        — the index raises if a repartition staled the calibration, so
+        the contract never silently degrades."""
         si = self.streaming_index
-        _, ids = si.query(hidden.astype(jnp.float32), 1, self.num_probe)
+        if self._recall_target is not None:
+            _, ids = si.query(hidden.astype(jnp.float32), 1,
+                              recall_target=self._recall_target)
+        else:
+            _, ids = si.query(hidden.astype(jnp.float32), 1,
+                              self.num_probe)
         return self._token_map_dev[ids[:, 0]]
 
     def _sharded_topk(self, hidden: jax.Array) -> jax.Array:
         """Greedy token via the distributed LSH head (monotone final
-        softcaps commute with top-1; index ids == vocab rows)."""
-        probe = min(self.num_probe, self.sharded_index.num_items)
-        _, ids = self._dist.query(hidden.astype(jnp.float32), 1, probe)
+        softcaps commute with top-1; index ids == vocab rows). Under a
+        recall contract the planned per-range budgets ride the same
+        jitted collective."""
+        if self._budgets is not None:
+            _, ids = self._dist.query(hidden.astype(jnp.float32), 1,
+                                      budgets=self._budgets)
+        else:
+            probe = min(self.num_probe, self.sharded_index.num_items)
+            _, ids = self._dist.query(hidden.astype(jnp.float32), 1,
+                                      probe)
         return ids[:, 0].astype(jnp.int32)
 
     # -- generation ----------------------------------------------------------

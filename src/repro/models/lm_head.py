@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 
@@ -46,6 +47,9 @@ class VocabIndex(NamedTuple):
 
     codes/range_id are in vocab order (NOT norm-sorted): token ids are the
     identity mapping, which keeps the decode path gather-free.
+    ``calib`` optionally carries a planner calibration table
+    (:func:`calibrate_vocab_index`) so decoding can take a
+    ``recall_target`` instead of a hand-picked ``num_probe``.
     """
 
     codes: jax.Array      # (V, W) uint32
@@ -55,6 +59,7 @@ class VocabIndex(NamedTuple):
     code_len: int
     hash_bits: int
     eps: float
+    calib: Optional[object] = None
 
 
 def build_vocab_index(unembed: jax.Array, key: jax.Array, *,
@@ -74,12 +79,51 @@ def build_vocab_index(unembed: jax.Array, key: jax.Array, *,
                       hash_bits, eps)
 
 
+def calibrate_vocab_index(index: VocabIndex, unembed: jax.Array,
+                          hidden: jax.Array, *, k: int = 10,
+                          true_vocab: Optional[int] = None,
+                          impl: str = "auto"):
+    """Planner calibration for LSH-decode (DESIGN.md §12): measure where
+    the exact top-k tokens of held-out hidden states land in the head's
+    dense probe order, and return the fitted table — attach it with
+    ``index._replace(calib=...)`` so ``lsh_topk_tokens`` can honor a
+    ``recall_target``. ``hidden`` should be real decode-time hidden
+    states (the serving distribution), ``(B, d)``."""
+    from repro.core.planner import calibrate_from_order
+
+    q = hashing.normalize(hidden.astype(jnp.float32))
+    zeros = jnp.zeros((q.shape[0],), q.dtype)
+    q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1],
+                              impl=impl)
+    ham = ops.hamming_scan(q_codes, index.codes, impl=impl)
+    scores = item_scores(index.upper, index.range_id, ham,
+                         index.hash_bits, index.eps)
+    if true_vocab is not None and true_vocab < index.codes.shape[0]:
+        scores = jnp.where(jnp.arange(index.codes.shape[0]) < true_vocab,
+                           scores, -jnp.inf)
+    # ties break by lower id, matching lax.top_k in the probe path
+    order = np.argsort(-np.asarray(jax.device_get(scores)), axis=1,
+                       kind="stable")
+    _, truth = exact_topk_tokens(hidden, unembed, k,
+                                 true_vocab=true_vocab)
+    return calibrate_from_order(
+        order, np.asarray(jax.device_get(index.range_id)),
+        np.asarray(jax.device_get(truth)),
+        num_ranges=int(index.upper.shape[0]))
+
+
+DEFAULT_NUM_PROBE = 1024
+
+
 def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
-                    unembed: jax.Array, *, k: int = 8, num_probe: int = 1024,
+                    unembed: jax.Array, *, k: int = 8,
+                    num_probe: Optional[int] = None,
                     final_softcap: Optional[float] = None,
                     true_vocab: Optional[int] = None,
                     impl: str = "auto",
-                    buckets=None) -> Tuple[jax.Array, jax.Array]:
+                    buckets=None,
+                    recall_target: Optional[float] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
     """Approximate top-k tokens for hidden states (B, d).
 
     Returns (logit_vals (B, k) f32, token_ids (B, k) int32). Probes the
@@ -92,7 +136,35 @@ def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
     O(B log B) directory work instead of the dense (B, V) scan +
     top_k. Padding rows may then consume probe budget (they are still
     excluded from the final top-k by the ``true_vocab`` re-rank mask).
+
+    ``recall_target`` plans ``num_probe`` from the planner's
+    global-prefix budget in the index's calibration table — the decode
+    head's recall contract (the scan is one global probe order, so the
+    scalar curve applies; see ``calibrate_vocab_index``). Exactly one of
+    the two may be passed; with neither, ``DEFAULT_NUM_PROBE`` applies.
     """
+    if recall_target is not None:
+        from repro.core.planner import check_contract_k, plan_global
+        if num_probe is not None:
+            raise ValueError("pass one of num_probe/recall_target")
+        if index.calib is not None:
+            check_contract_k(index.calib, k)
+        if index.calib is None:
+            raise ValueError(
+                "recall_target needs a calibrated VocabIndex — attach "
+                "calibrate_vocab_index() via index._replace(calib=...)")
+        if buckets is not None and true_vocab is not None \
+                and true_vocab < index.codes.shape[0]:
+            # the bucket walk spends budget on padding rows the dense
+            # calibration masked out, silently under-delivering recall
+            raise ValueError(
+                "recall_target with engine='bucket' needs a padding-free "
+                "store: build the index/buckets over the true vocab rows "
+                "(as build_sharded_vocab_index does) instead of masking "
+                "with true_vocab")
+        num_probe = plan_global(index.calib, recall_target).num_probe
+    elif num_probe is None:
+        num_probe = DEFAULT_NUM_PROBE
     q = hashing.normalize(hidden.astype(jnp.float32))
     zeros = jnp.zeros((q.shape[0],), q.dtype)
     q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)

@@ -163,6 +163,11 @@ class MutableIndex:
         self.num_full_rebuilds = 0
         self.events: List[dict] = []
         self.tomb_csr = int(tomb_csr)
+        # planner calibration (DESIGN.md §12): measured recall curves are
+        # only as good as the partition they were measured under, so any
+        # event that moves range boundaries flags them stale.
+        self.calib = None
+        self.calib_stale = False
         # ranges whose skew couldn't be rebalanced (e.g. all norms equal):
         # muted until the next structural event, so duplicate-heavy traffic
         # doesn't pay an O(N) no-op rebalance attempt per insert batch.
@@ -349,6 +354,17 @@ class MutableIndex:
 
     # -- query ---------------------------------------------------------------
 
+    def set_calibration(self, calib) -> None:
+        """Attach a :class:`repro.core.planner.CalibrationTable` (from
+        ``planner.calibrate_streaming``); clears the stale flag."""
+        self.calib = calib
+        self.calib_stale = False
+
+    def _invalidate_calibration(self, why: str) -> None:
+        if self.calib is not None and not self.calib_stale:
+            self.calib_stale = True
+            self._event("calibration_stale", why=why)
+
     def encode_queries(self, queries: jax.Array) -> jax.Array:
         return self.family.encode_queries(
             self.A, jnp.asarray(queries, jnp.float32), impl=self.impl)
@@ -379,14 +395,38 @@ class MutableIndex:
             probe_base=probe_base, hash_bits=self.hash_bits, engine=engine,
             impl=self.impl)
 
-    def query(self, queries: jax.Array, k: int, num_probe: int
+    def query(self, queries: jax.Array, k: int,
+              num_probe: Optional[int] = None, *,
+              recall_target: Optional[float] = None
               ) -> Tuple[jax.Array, jax.Array]:
         """Probe + exact re-rank: (vals, global ids), each (Q, k).
 
         ``num_probe`` is capped at the total row count (CSR + delta), not
         the live count, so callers may pass a fixed budget: the effective
         shape changes only at structural events (dead tail entries re-rank
-        to ``-inf``), keeping steady-state traffic on the jit cache."""
+        to ``-inf``), keeping steady-state traffic on the jit cache.
+
+        ``recall_target`` plans the budget from the attached calibration
+        (the merged engine has one global probe order, so the scalar
+        ``plan_global`` curve applies); a structural event that moved
+        range boundaries marks the calibration stale and the contract
+        unenforceable until ``set_calibration`` refreshes it."""
+        if recall_target is not None:
+            if num_probe is not None:
+                raise ValueError("pass one of num_probe/recall_target")
+            if self.calib is None:
+                raise ValueError(
+                    "recall_target needs planner.calibrate_streaming() "
+                    "attached via set_calibration()")
+            if self.calib_stale:
+                raise ValueError(
+                    "calibration is stale (a repartition moved range "
+                    "boundaries) — recalibrate before planning")
+            from repro.core.planner import check_contract_k, plan_global
+            check_contract_k(self.calib, k)
+            num_probe = plan_global(self.calib, recall_target).num_probe
+        if num_probe is None:
+            raise ValueError("pass num_probe or recall_target")
         num_probe = min(int(num_probe),
                         self.num_csr_items + self.delta.capacity)
         if num_probe <= 0:
@@ -542,6 +582,7 @@ class MutableIndex:
         bound and re-encode only range ``j``'s members."""
         old_U = float(self.upper[j])
         self.upper[j] = new_U
+        self._invalidate_calibration("overflow")
         srows, dslots = self._members(j, j)
         if srows.size == 0 and dslots.size == 0:
             # empty bin taking its first item: bound set, rank table moves
@@ -582,6 +623,7 @@ class MutableIndex:
             self._skew_muted.add(j)
             self._event("rebalance_blocked", range=j)
             return
+        self._invalidate_calibration("skew_rebalance")
         self._rid[srows] = np.where(self._norms[srows] <= boundary, lo, hi)
         self.delta._rid[dslots] = np.where(
             self.delta._norms[dslots] <= boundary, lo, hi)

@@ -19,6 +19,10 @@ Layout (one ``step_*`` dir per snapshot)::
             csr_codes csr_rid
     meta/   upper lower edges A + 0-d scalars (code_len, hash_bits, eps,
             capacity, max_tombstones, tomb_csr)
+    calib/  planner calibration table (DESIGN.md §12), only when one is
+            attached: probe_grid recall_range recall_global truth_mass
+            range_counts + 0-d scalars (k, num_queries, stale) — absent in
+            pre-planner snapshots, so mounting them yields calib=None
 """
 
 from __future__ import annotations
@@ -47,7 +51,7 @@ def index_tree(mindex: MutableIndex) -> Dict[str, Any]:
     """The index as an array pytree (0-d arrays for static scalars)."""
     d = mindex.delta
     c = mindex._csr
-    return {
+    tree = {
         "store": {
             "items": mindex.items,
             "norms": jnp.asarray(mindex._norms),
@@ -85,6 +89,19 @@ def index_tree(mindex: MutableIndex) -> Dict[str, Any]:
                                  jnp.float32),
         },
     }
+    if mindex.calib is not None:
+        cal = mindex.calib
+        tree["calib"] = {
+            "probe_grid": jnp.asarray(cal.probe_grid, jnp.int32),
+            "recall_range": jnp.asarray(cal.recall_range, jnp.float32),
+            "recall_global": jnp.asarray(cal.recall_global, jnp.float32),
+            "truth_mass": jnp.asarray(cal.truth_mass, jnp.float32),
+            "range_counts": jnp.asarray(cal.range_counts, jnp.int32),
+            "k": jnp.asarray(cal.k, jnp.int32),
+            "num_queries": jnp.asarray(cal.num_queries, jnp.int32),
+            "stale": jnp.asarray(int(mindex.calib_stale), jnp.int32),
+        }
+    return tree
 
 
 def save_index(manager: CheckpointManager, step: int,
@@ -143,7 +160,7 @@ def load_index(directory: str, step: Optional[int] = None,
                                 U=float(meta["fam_U"]))
     else:
         family = SimpleLSHFamily()
-    return MutableIndex(
+    mindex = MutableIndex(
         family=family,
         items=st["items"], norms=np.asarray(st["norms"]),
         codes=np.asarray(st["codes"]), range_id=np.asarray(st["range_id"]),
@@ -153,3 +170,15 @@ def load_index(directory: str, step: Optional[int] = None,
         hash_bits=int(meta["hash_bits"]), eps=float(meta["eps"]),
         capacity=capacity, max_tombstones=int(meta["max_tombstones"]),
         csr=csr, delta=delta, tomb_csr=int(meta["tomb_csr"]), **kw)
+    cal = tree.get("calib")
+    if cal is not None:
+        from repro.core.planner import CalibrationTable
+        mindex.calib = CalibrationTable(
+            probe_grid=np.asarray(cal["probe_grid"], np.int64),
+            recall_range=np.asarray(cal["recall_range"], np.float32),
+            recall_global=np.asarray(cal["recall_global"], np.float32),
+            truth_mass=np.asarray(cal["truth_mass"], np.float32),
+            range_counts=np.asarray(cal["range_counts"], np.int64),
+            k=int(cal["k"]), num_queries=int(cal["num_queries"]))
+        mindex.calib_stale = bool(int(cal["stale"]))
+    return mindex

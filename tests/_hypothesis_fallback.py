@@ -1,10 +1,17 @@
 """Minimal deterministic stand-in for `hypothesis` (not installed here).
 
-The suite only uses ``@given`` with ``st.integers(lo, hi)`` / ``st.booleans()``
-plus the ``settings`` profile plumbing. This shim replays each property test
-over a small fixed sample grid (bounds, midpoints, and a few pseudo-random
-interior points) so the invariants still get exercised. ``conftest.py``
-installs it into ``sys.modules`` only when the real package is absent.
+The suite uses ``@given`` with ``st.integers`` / ``st.booleans`` /
+``st.floats`` / ``st.sampled_from`` and ``@st.composite`` strategies (the
+conformance suite's long-tail dataset generators), plus the ``settings``
+profile plumbing. This shim replays each property test over a small fixed
+sample grid (bounds, midpoints, and a few pseudo-random interior points)
+so the invariants still get exercised. ``conftest.py`` installs it into
+``sys.modules`` only when the real package is absent.
+
+A test whose strategies the shim cannot sample does NOT silently pass:
+``given`` raises ``pytest.skip`` when zero examples ran, so the CI run
+with real hypothesis remains the authority and local runs report the gap
+instead of a hollow green.
 """
 
 from __future__ import annotations
@@ -12,6 +19,10 @@ from __future__ import annotations
 import itertools
 import random
 import types
+
+IS_FALLBACK = True
+
+_MAX_SAMPLES = 5
 
 
 class _Strategy:
@@ -22,8 +33,17 @@ class _Strategy:
 def integers(lo: int, hi: int) -> _Strategy:
     rng = random.Random(lo * 1000003 + hi)
     pts = {lo, hi, (lo + hi) // 2}
-    while len(pts) < min(5, hi - lo + 1):
+    while len(pts) < min(_MAX_SAMPLES, hi - lo + 1):
         pts.add(rng.randint(lo, hi))
+    return _Strategy(sorted(pts))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    rng = random.Random(hash((min_value, max_value)) & 0xFFFFFFFF)
+    pts = {min_value, max_value, 0.5 * (min_value + max_value)}
+    # degenerate interval: nothing new to sample (don't spin forever)
+    while min_value < max_value and len(pts) < _MAX_SAMPLES:
+        pts.add(min_value + (max_value - min_value) * rng.random())
     return _Strategy(sorted(pts))
 
 
@@ -31,13 +51,67 @@ def booleans() -> _Strategy:
     return _Strategy([False, True])
 
 
-def given(*strategies: _Strategy):
+def sampled_from(seq) -> _Strategy:
+    return _Strategy(list(seq)[:_MAX_SAMPLES])
+
+
+def just(value) -> _Strategy:
+    return _Strategy([value])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = None) -> _Strategy:
+    max_size = min_size + 2 if max_size is None else max_size
+    out = []
+    for size in range(min_size, max_size + 1):
+        out.append([elements.samples[i % len(elements.samples)]
+                    for i in range(size)])
+    return _Strategy(out[:_MAX_SAMPLES])
+
+
+def composite(fn):
+    """Deterministic emulation of ``@st.composite``: replay the builder a
+    few times with a ``draw`` that walks each inner strategy's sample grid
+    at a trial-dependent stride, so distinct trials see distinct
+    combinations."""
+
+    def strategy(*args, **kwargs):
+        samples = []
+        for trial in range(3):   # composite values are expensive downstream
+            calls = itertools.count()
+
+            def draw(s: _Strategy, _trial=trial):
+                if not s.samples:
+                    raise ValueError("fallback strategy has no samples")
+                # call stride 2 is coprime to the 5-sample grids, so
+                # draws within a trial decorrelate instead of collapsing
+                # to one index
+                i = (_trial * 3 + 2 * next(calls)) % len(s.samples)
+                return s.samples[i]
+
+            samples.append(fn(draw, *args, **kwargs))
+        return _Strategy(samples)
+
+    return strategy
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
     def deco(fn):
         # NOTE: no functools.wraps — copying fn's signature would make pytest
         # treat the strategy-filled parameters as fixtures.
         def wrapper():
-            for combo in itertools.product(*(s.samples for s in strategies)):
-                fn(*combo)
+            ran = 0
+            for combo in itertools.product(
+                    *(s.samples for s in strategies),
+                    *(s.samples for s in kw_strategies.values())):
+                pos = combo[:len(strategies)]
+                kws = dict(zip(kw_strategies, combo[len(strategies):]))
+                fn(*pos, **kws)
+                ran += 1
+            if not ran:   # never pass silently on an unsampleable strategy
+                import pytest
+                pytest.skip("hypothesis fallback shim could not sample "
+                            "this strategy (install hypothesis)")
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__
@@ -72,9 +146,15 @@ def build_module() -> types.ModuleType:
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
+    st.floats = floats
     st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.just = just
+    st.lists = lists
+    st.composite = composite
     mod.strategies = st
     mod.given = given
     mod.settings = settings
     mod.HealthCheck = HealthCheck
+    mod.IS_FALLBACK = IS_FALLBACK
     return mod

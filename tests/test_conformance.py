@@ -1,0 +1,187 @@
+"""Planner conformance suite (DESIGN.md §12): property-based cross-engine
+invariants over long-tail norm distributions.
+
+Hypothesis generates lognormal/Zipf norm mixtures (the paper's Fig-1
+long-tail profiles) and the tests assert the planner's contract surface:
+
+  * plans for increasing recall targets are *nested* — per-range budgets
+    grow elementwise and the planned candidate set of a smaller target is
+    an order-preserving subset of a larger target's;
+  * bucket, dense and distributed execution of the same budgets return
+    identical candidate ids (the per-range-prefix contract is engine
+    independent);
+  * measured recall against brute-force ground truth meets the planner's
+    predicted recall (exactly on the calibration sample, within sampling
+    tolerance held-out).
+
+Runs under real hypothesis in CI (including the 8-forced-host-device step,
+where the distributed invariant exercises real ``shard_map`` collectives);
+under the deterministic fallback shim (conftest.py) the same properties
+replay on a fixed sample grid and skip-annotate rather than silently pass
+if a strategy cannot be sampled.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import distributed, planner, topk
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
+from repro.launch.mesh import make_local_mesh
+
+SETTINGS = dict(max_examples=4, deadline=None,
+                suppress_health_check=list(HealthCheck))
+
+TARGETS = (0.5, 0.8, 0.95)
+
+
+@st.composite
+def longtail_params(draw):
+    """Long-tail dataset parameters (Fig 1b): a lognormal body mixed with
+    a Zipf/Pareto tail, plus index shape knobs."""
+    return dict(
+        n=draw(st.integers(250, 450)),
+        d=draw(st.integers(8, 16)),
+        sigma=draw(st.floats(0.4, 1.1)),
+        zipf_a=draw(st.floats(1.5, 3.5)),
+        mix=draw(st.floats(0.3, 0.9)),
+        m=draw(st.sampled_from([4, 8])),
+        seed=draw(st.integers(0, 2 ** 16)),
+    )
+
+
+def make_longtail(p, num_queries=64):
+    """(items, queries) with mixed lognormal/Zipf norms."""
+    rng = np.random.default_rng(p["seed"])
+    n, d = p["n"], p["d"]
+    ln = rng.lognormal(0.0, p["sigma"], n)
+    zf = (1.0 / (1.0 - rng.uniform(0.0, 0.99, n))) ** (1.0 / p["zipf_a"])
+    norms = np.where(rng.uniform(0.0, 1.0, n) < p["mix"], ln, zf)
+    dirs = rng.normal(size=(n, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    items = jnp.asarray(dirs * norms[:, None], jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(num_queries, d)), jnp.float32)
+    return items, queries
+
+
+def build_calibrated(p, family="simple", extra_queries=0):
+    items, queries = make_longtail(p, num_queries=64 + extra_queries)
+    spec = IndexSpec(family=family, code_len=16, m=p["m"],
+                     charge_index_bits=False)
+    cidx = build(spec, items, jax.random.PRNGKey(p["seed"] % 97),
+                 calibration_queries=queries[:64])
+    return cidx, queries
+
+
+def assert_ordered_subset(small: np.ndarray, big: np.ndarray):
+    """Every row of ``small`` is an order-preserving subset of ``big``."""
+    for s_row, b_row in zip(small, big):
+        pos = {int(v): i for i, v in enumerate(b_row)}
+        assert all(int(v) in pos for v in s_row), \
+            "smaller plan probed an item the larger plan skipped"
+        idx = [pos[int(v)] for v in s_row]
+        assert idx == sorted(idx), \
+            "shared candidates changed relative order between plans"
+
+
+@settings(**SETTINGS)
+@given(longtail_params())
+def test_plans_nest_across_targets(p):
+    """Budgets grow elementwise with the target and planned candidate
+    sets are prefix-supersets (order-preserving set inclusion)."""
+    cidx, queries = build_calibrated(p)
+    eng = QueryEngine(cidx, engine="bucket")
+    prev_budget, prev_cand = None, None
+    for target in TARGETS:
+        pl = planner.plan(cidx.calib, target)
+        cand = np.asarray(eng.candidates(queries[:8],
+                                         budgets=pl.budgets))
+        if prev_budget is not None:
+            assert all(a <= b for a, b in zip(prev_budget, pl.budgets))
+            assert_ordered_subset(prev_cand, cand)
+        prev_budget, prev_cand = pl.budgets, cand
+
+
+@settings(**SETTINGS)
+@given(longtail_params(), st.sampled_from(["simple", "l2_alsh",
+                                           "sign_alsh"]))
+def test_engines_agree_on_planned_budgets(p, family):
+    """bucket == dense == distributed on the same per-range budgets:
+    identical candidate ids and (for distributed) bit-identical merged
+    top-k ids."""
+    cidx, queries = build_calibrated(p, family=family)
+    pl = planner.plan(cidx.calib, 0.8)
+    q = queries[:6]
+    eng_d = QueryEngine(cidx, engine="dense")
+    eng_b = QueryEngine(cidx, engine="bucket", buckets=eng_d.buckets)
+    cd = np.asarray(eng_d.candidates(q, budgets=pl.budgets))
+    cb = np.asarray(eng_b.candidates(q, budgets=pl.budgets))
+    np.testing.assert_array_equal(cd, cb)
+
+    k = min(10, pl.num_probe)
+    want_v, want_i = eng_b.query(q, k, budgets=pl.budgets)
+    mesh = make_local_mesh()
+    shards = mesh.shape["data"]
+    sidx = build(cidx.spec, cidx.items, jax.random.PRNGKey(p["seed"] % 97),
+                 num_shards=shards)
+    placed = distributed.shard_index(sidx, mesh)
+    for dist_engine in ("bucket", "dense"):
+        deng = distributed.DistributedEngine(placed, mesh,
+                                             engine=dist_engine)
+        got_v, got_i = deng.query(q, k, budgets=pl.budgets)
+        np.testing.assert_array_equal(np.asarray(got_i),
+                                      np.asarray(want_i))
+        np.testing.assert_allclose(np.asarray(got_v),
+                                   np.asarray(want_v),
+                                   rtol=2e-6, atol=2e-6)
+
+
+@settings(**SETTINGS)
+@given(longtail_params())
+def test_recall_meets_planner_contract(p):
+    """On the calibration sample the planned recall equals the predicted
+    recall (the curves *are* the measurement); held-out queries from the
+    same distribution stay within sampling tolerance."""
+    cidx, queries = build_calibrated(p, extra_queries=128)
+    eng = QueryEngine(cidx, engine="bucket")
+    k = cidx.calib.k
+    for target in (0.6, 0.9):
+        pl = planner.plan(cidx.calib, target)
+        assert pl.predicted_recall >= target - 1e-6
+
+        cal_q = queries[:64]
+        _, truth = topk.exact_mips(cal_q, cidx.items, k)
+        cand = eng.candidates(cal_q, budgets=pl.budgets)
+        measured = float(topk.recall_at(cand, truth))
+        np.testing.assert_allclose(measured, pl.predicted_recall,
+                                   atol=1e-5)
+
+        held = queries[64:]
+        _, truth_h = topk.exact_mips(held, cidx.items, k)
+        cand_h = eng.candidates(held, budgets=pl.budgets)
+        assert float(topk.recall_at(cand_h, truth_h)) \
+            >= target - 0.12, "held-out recall fell out of tolerance"
+
+
+@settings(**SETTINGS)
+@given(longtail_params())
+def test_adaptive_matches_planned_topk(p):
+    """The early-termination arm returns the same top-k as the full
+    planned re-rank (the bound is provable, not the eq.-12 estimate) and
+    never probes more than the plan."""
+    cidx, queries = build_calibrated(p)
+    eng = QueryEngine(cidx, engine="bucket")
+    pl = planner.plan(cidx.calib, 0.9)
+    k = min(5, pl.num_probe)
+    q = queries[:8]
+    want_v, _ = eng.query(q, k, budgets=pl.budgets)
+    got_v, got_i, used = planner.adaptive_query(eng, q, k,
+                                               budgets=pl.budgets)
+    np.testing.assert_allclose(np.sort(np.asarray(got_v), axis=1),
+                               np.sort(np.asarray(want_v), axis=1),
+                               rtol=1e-5, atol=1e-6)
+    assert (np.asarray(used) <= pl.num_probe).all()
+    assert (np.asarray(used) >= min(k, pl.num_probe)).all()

@@ -164,6 +164,8 @@ def test_distributed_query_validation(longtail_ds):
     eng = distributed.DistributedEngine(placed, mesh)
     n = sidx.num_items
     with pytest.raises(ValueError, match="num_probe"):
+        eng.query(longtail_ds.queries[:2], 5)
+    with pytest.raises(ValueError, match="num_probe"):
         eng.query(longtail_ds.queries[:2], 5, n + 1)
     with pytest.raises(ValueError, match="k="):
         eng.query(longtail_ds.queries[:2], 50, 10)
@@ -258,6 +260,40 @@ def test_sharded_parity_on_8_devices():
                          capture_output=True, text=True, env=env,
                          timeout=560)
     assert "SUBPROCESS_OK" in out.stdout, out.stderr[-2000:]
+
+
+# -- jitted-collective cache --------------------------------------------------
+
+
+def test_mapped_cache_traces_once_per_budget(longtail_ds, monkeypatch):
+    """Regression pin for the PR 4 executable cache: the shard_map body
+    must trace exactly once per distinct (num_probe, k[, budgets]) —
+    repeat traffic on the same budget hits the cache. Counted at the
+    source: the python body runs once per jit trace."""
+    mesh = make_local_mesh()
+    spec = IndexSpec(family="simple", code_len=16, m=8)
+    sidx = build(spec, longtail_ds.items[:400], KEY,
+                 num_shards=mesh.shape["data"])
+    placed = distributed.shard_index(sidx, mesh)
+    eng = distributed.DistributedEngine(placed, mesh, engine="bucket")
+
+    traces = []
+    real_body = distributed._shard_query
+
+    def counting_body(*args, **kw):
+        traces.append(kw.get("num_probe"))
+        return real_body(*args, **kw)
+
+    monkeypatch.setattr(distributed, "_shard_query", counting_body)
+    q = longtail_ds.queries[:3]
+    eng.query(q, 5, 60)
+    eng.query(q, 5, 60)          # same pair: cache hit, no retrace
+    eng.query(q, 5, 90)          # second pair: exactly one more trace
+    assert len(traces) == 2, \
+        f"expected 2 traces for 2 (num_probe, k) pairs, saw {len(traces)}"
+    eng.query(q, 5, budgets=(10, 10, 10, 10, 5, 5, 5, 5))
+    eng.query(q, 5, budgets=(10, 10, 10, 10, 5, 5, 5, 5))
+    assert len(traces) == 3, "planned budgets must key the cache too"
 
 
 # -- vocab-sharded LSH head ---------------------------------------------------

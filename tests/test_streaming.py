@@ -348,3 +348,50 @@ def test_checkpoint_mount_roundtrip(ds, pool, tmp_path):
 def test_load_missing_checkpoint_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         streaming.load_index(str(tmp_path))
+
+
+def test_calibration_roundtrip_and_drift_invalidation(ds, pool, tmp_path):
+    """Planner calibration (DESIGN.md §12) survives save/mount — the
+    mounted index honors the same recall contract — and a drift-triggered
+    repartition that moves range boundaries flags it stale on both the
+    live index and snapshots taken afterwards."""
+    from repro.core import planner
+
+    mi = streaming.build(ds.items, jax.random.PRNGKey(1), 12, 8,
+                         capacity=64)
+    mi.set_calibration(planner.calibrate_streaming(mi, ds.queries, k=5))
+    mgr = CheckpointManager(str(tmp_path))
+    streaming.save_index(mgr, 1, mi)
+    loaded = streaming.load_index(str(tmp_path))
+    assert loaded.calib is not None and not loaded.calib_stale
+    np.testing.assert_array_equal(loaded.calib.probe_grid,
+                                  mi.calib.probe_grid)
+    np.testing.assert_allclose(loaded.calib.recall_range,
+                               mi.calib.recall_range)
+    np.testing.assert_allclose(loaded.calib.truth_mass,
+                               mi.calib.truth_mass)
+    assert loaded.calib.k == mi.calib.k
+    v1 = mi.query(ds.queries, 5, recall_target=0.8)
+    v2 = loaded.query(ds.queries, 5, recall_target=0.8)
+    np.testing.assert_array_equal(np.asarray(v1[1]), np.asarray(v2[1]))
+
+    # overflow insert -> localized repartition moves a range boundary
+    hi = np.zeros((1, mi.items.shape[1]), np.float32)
+    hi[0, 0] = float(mi.upper.max()) * 2.0
+    mi.insert(jnp.asarray(hi))
+    assert mi.calib_stale
+    assert any(e["kind"] == "calibration_stale" for e in mi.events)
+    streaming.save_index(mgr, 2, mi)
+    reloaded = streaming.load_index(str(tmp_path), step=2)
+    assert reloaded.calib is not None
+    assert reloaded.calib_stale, \
+        "staleness must survive the checkpoint round-trip"
+    with pytest.raises(ValueError, match="stale"):
+        reloaded.query(ds.queries, 5, recall_target=0.8)
+
+    # pre-planner snapshots (step 1 was saved calibrated; simulate by
+    # mounting an old-layout tree) still mount with calib=None
+    old = streaming.build(ds.items[:100], jax.random.PRNGKey(2), 12, 4,
+                          capacity=32)
+    streaming.save_index(mgr, 3, old)
+    assert streaming.load_index(str(tmp_path), step=3).calib is None
