@@ -1,0 +1,271 @@
+"""Observability report: replay a long-tail workload with the full obs
+layer attached (DESIGN.md §13) — writes BENCH_<n>.json.
+
+One :class:`repro.obs.Tracker` (ring buffer + JSONL sinks) is threaded
+through every serving surface, then a mixed workload is replayed against
+it on the paper's Fig-1b profile (lognormal norms):
+
+  * **contract serving** — QueryEngine(bucket) batches under a
+    ``recall_target`` contract, with a :class:`repro.obs.RecallAuditor`
+    brute-forcing sampled online ground-truth audits: the report carries
+    the ``achieved_recall`` time series against the target.
+  * **adaptive probing** — ``planner.adaptive_query`` over the same
+    budgets: per-query ``probes_used`` and early-termination savings
+    histograms.
+  * **streaming churn** — insert/delete/query traffic against a
+    ``MutableIndex``, with one batch of bound-breaching norms driving a
+    localized repartition; every structural event (compaction,
+    repartition, calibration staleness) lands in the tracker as a typed
+    event, and ``stats()`` routes the drift-monitor quantiles out as
+    gauges.
+  * **distributed** — DistributedEngine queries over two budget vectors
+    on forced host devices: jitted-collective cache hit/miss counters and
+    the ``trace_count`` gauge.
+
+The JSON's ``spans`` block is the measured per-stage timing table
+(``hash_encode -> directory_match -> segmented_gather -> re_rank ->
+top_k``) that ``benchmarks/roofline_report.py --obs`` compares against the
+dryrun analytic model. ``REPRO_BENCH_SMOKE=1`` shrinks everything to
+CI-canary size and writes the JSON to a temp dir.
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules:                 # flags must precede jax init
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import json
+import tempfile
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt
+from repro import streaming
+from repro.core import planner
+from repro.core.distributed import DistributedEngine, build_sharded, \
+    shard_index
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
+from repro.data.synthetic import make_dataset
+from repro.obs import JsonlSink, RecallAuditor, RingBufferSink, Tracker, \
+    read_jsonl
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K = 10
+TARGET = 0.95
+
+if bench_smoke():                    # CI canary: toy sizes
+    N, D, Q_CAL, L, M = 3_000, 24, 128, 16, 16
+    BATCHES, QB = 8, 16
+    S_ROUNDS, S_INS, S_DEL = 4, 32, 8
+    SHARDS = 8
+else:
+    N, D, Q_CAL, L, M = 30_000, 32, 256, 16, 32
+    BATCHES, QB = 32, 32
+    S_ROUNDS, S_INS, S_DEL = 12, 64, 16
+    SHARDS = 8
+
+# query-path stage spans the report (and roofline --obs) cares about
+STAGES = ("repro.engine.hash_encode", "repro.engine.directory_match",
+          "repro.engine.segmented_gather", "repro.engine.re_rank",
+          "repro.engine.top_k", "repro.engine.query")
+
+
+def replay_contract(tracker: Tracker, cidx, queries, rng) -> dict:
+    """Serve BATCHES query batches under the recall contract with
+    sampled online audits."""
+    eng = QueryEngine(cidx, engine="bucket", tracker=tracker)
+    auditor = RecallAuditor(tracker, recall_target=TARGET,
+                            sample_fraction=0.5, tolerance=0.05)
+    for _ in range(BATCHES):
+        qb = queries[rng.choice(queries.shape[0], QB, replace=False)]
+        _, ids = eng.query(qb, K, recall_target=TARGET)
+        auditor.audit(qb, np.asarray(jax.device_get(ids)), cidx.items,
+                      k=K)
+    audits = [e for e in tracker.events
+              if e["name"] == "repro.planner.audit"]
+    achieved = [a["achieved_recall"] for a in audits]
+    return {
+        "recall_target": TARGET,
+        "batches": BATCHES, "batch_size": QB,
+        "batches_audited": auditor.batches_audited,
+        "series": [{"batch": a["batch"],
+                    "achieved_recall": round(a["achieved_recall"], 4)}
+                   for a in audits],
+        "mean_achieved": round(float(np.mean(achieved)), 4),
+        "min_achieved": round(float(np.min(achieved)), 4),
+        "shortfalls": int(tracker.counters.get(
+            "repro.planner.audit.shortfall", 0)),
+    }
+
+
+def replay_adaptive(tracker: Tracker, cidx, queries) -> dict:
+    eng = QueryEngine(cidx, engine="bucket", tracker=tracker)
+    pl = planner.plan(cidx.calib, TARGET)
+    planner.adaptive_query(eng, queries[:QB], K, budgets=pl.budgets,
+                           tracker=tracker)
+    used = tracker.hists["repro.planner.probes_used"].summary()
+    sav = tracker.hists["repro.planner.adaptive_savings"].summary()
+    return {"planned_num_probe": pl.num_probe,
+            "probes_used": {k: round(v, 2) for k, v in used.items()},
+            "savings": {k: round(v, 4) for k, v in sav.items()}}
+
+
+def replay_streaming(tracker: Tracker, items, queries, rng) -> dict:
+    """Churn traffic; one inflated-norm batch forces a repartition."""
+    mi = streaming.build(items, jax.random.PRNGKey(1), L, max(8, M // 2),
+                         capacity=256, max_tombstones=128,
+                         tracker=tracker)
+    ref_norms = np.linalg.norm(np.asarray(items), axis=1)
+    for r in range(S_ROUNDS):
+        v = rng.normal(size=(S_INS, D)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=1, keepdims=True)
+        scale = rng.choice(ref_norms, size=(S_INS, 1))
+        if r == S_ROUNDS // 2:
+            # breach the top range's bound -> overflow-driven repartition
+            scale = np.full((S_INS, 1), 2.0 * ref_norms.max(), np.float32)
+        mi.insert(v * scale)
+        live = np.flatnonzero(mi._live)
+        mi.delete(rng.choice(live, size=S_DEL, replace=False).tolist())
+        mi.query(queries[:QB], K, 200)
+    stats = mi.stats()        # routes drift quantiles through the tracker
+    kinds = {}
+    for e in mi.events:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    # parity: the tracker saw every MutableIndex event (satellite fix —
+    # events used to pile up silently in the list with no export path)
+    mirrored = sum(1 for e in tracker.events
+                   if e["name"].startswith("repro.streaming.")
+                   and e["name"] != "repro.streaming.drift.snapshot")
+    return {"rounds": S_ROUNDS, "inserts": S_ROUNDS * S_INS,
+            "deletes": S_ROUNDS * S_DEL,
+            "event_counts": kinds,
+            "events_mirrored_to_tracker": mirrored,
+            "repartition_events": kinds.get("repartition", 0),
+            "live": stats["live"], "num_repartitions": stats.get(
+                "num_repartitions", mi.num_repartitions)}
+
+
+def replay_distributed(tracker: Tracker, spec, items, queries, pl) -> dict:
+    sidx = build_sharded(spec, items, jax.random.PRNGKey(7), SHARDS)
+    mesh = Mesh(np.array(jax.devices()[:SHARDS]), ("data",))
+    deng = DistributedEngine(shard_index(sidx, mesh), mesh,
+                             engine="bucket", tracker=tracker)
+    for _ in range(3):        # same budgets: 1 trace + 2 cache hits
+        deng.query(queries[:QB], K, budgets=pl.budgets)
+    deng.query(queries[:QB], K, 128)     # new budget: second trace
+    c = tracker.counters
+    return {"jit_cache_hits": int(c.get(
+                "repro.engine.distributed.jit_cache.hit", 0)),
+            "jit_cache_misses": int(c.get(
+                "repro.engine.distributed.jit_cache.miss", 0)),
+            "trace_count": int(tracker.gauges.get(
+                "repro.engine.distributed.trace_count", 0))}
+
+
+def main() -> None:
+    jsonl_path = os.path.join(tempfile.mkdtemp(prefix="obs_bench_"),
+                              "events.jsonl")
+    ring = RingBufferSink(capacity=1 << 16)
+    tracker = Tracker(sinks=[ring, JsonlSink(jsonl_path)])
+    rng = np.random.default_rng(0)
+
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, d=D,
+                      num_queries=Q_CAL + QB * 4)
+    cal_q, eval_q = ds.queries[:Q_CAL], ds.queries[Q_CAL:]
+    spec = IndexSpec(family="simple", code_len=L, m=M,
+                     charge_index_bits=False, tracker=tracker)
+    cidx = build(spec, ds.items, jax.random.PRNGKey(7),
+                 calibration_queries=cal_q, calibration_k=K)
+
+    num_buckets = QueryEngine(cidx, engine="bucket",
+                              tracker=tracker).buckets.num_buckets
+
+    audit = replay_contract(tracker, cidx, eval_q, rng)
+    emit("obs_contract", 0.0,
+         f"mean_achieved={fmt(audit['mean_achieved'], 3)}|"
+         f"audited={audit['batches_audited']}/{BATCHES}")
+
+    adaptive = replay_adaptive(tracker, cidx, eval_q)
+    emit("obs_adaptive", 0.0,
+         f"probes_used_p50={fmt(adaptive['probes_used']['p50'], 1)}|"
+         f"savings_p50={fmt(adaptive['savings']['p50'], 3)}")
+
+    strm = replay_streaming(tracker, ds.items[:max(N // 10, 500)], eval_q,
+                            rng)
+    emit("obs_streaming", 0.0,
+         f"repartitions={strm['repartition_events']}|"
+         f"events={sum(strm['event_counts'].values())}")
+
+    pl = planner.plan(cidx.calib, TARGET)
+    dist = replay_distributed(tracker, spec, ds.items, eval_q, pl)
+    emit("obs_distributed", 0.0,
+         f"traces={dist['trace_count']}|hits={dist['jit_cache_hits']}")
+
+    tracker.close()
+    snap = tracker.snapshot()
+    spans = {name: {k: (round(v, 7) if isinstance(v, float) else v)
+                    for k, v in snap["hists"][name].items()}
+             for name in STAGES if name in snap["hists"]}
+    probes = {name: {k: (round(v, 2) if isinstance(v, float) else v)
+                     for k, v in h.items()}
+              for name, h in snap["hists"].items()
+              if name.startswith("repro.engine.probes_used.")}
+
+    out = {
+        "bench": "obs", "n": N, "d": D, "code_len": L, "num_ranges": M,
+        "k": K, "recall_target": TARGET,
+        "note": "span timings are host-CPU wall-clock with explicit "
+                "device sync at stage boundaries; stage names are the "
+                "DESIGN.md §13 metric scheme",
+        # shape of one served batch — roofline --obs builds its analytic
+        # per-stage cost model from these
+        "query_shape": {"q": QB, "n": N, "d": D, "code_len": L,
+                        "num_buckets": num_buckets,
+                        "probe_width": snap["hists"]
+                        ["repro.engine.probe_width"]["p50"],
+                        "k": K},
+        "spans": spans,
+        "probes_used_per_range": probes,
+        "recall_audit": audit,
+        "adaptive": adaptive,
+        "streaming": strm,
+        "distributed": dist,
+        "export": {"ring_records": ring.total,
+                   "ring_dropped": ring.dropped,
+                   "jsonl_records": len(read_jsonl(jsonl_path)),
+                   "counters": len(snap["counters"]),
+                   "gauges": len(snap["gauges"]),
+                   "hists": len(snap["hists"]),
+                   "events": snap["num_events"]},
+    }
+    out["acceptance"] = {
+        "achieved_recall": audit["mean_achieved"],
+        "recall_within_tolerance": bool(
+            audit["mean_achieved"] >= TARGET - 0.05),
+        "all_stage_spans_present": all(
+            s in spans for s in STAGES),
+        "repartition_observed": bool(strm["repartition_events"] >= 1),
+        "jit_cache_observable": bool(
+            dist["trace_count"] == 2 and dist["jit_cache_hits"] >= 2),
+        "meets": bool(
+            audit["mean_achieved"] >= TARGET - 0.05
+            and all(s in spans for s in STAGES)
+            and strm["repartition_events"] >= 1
+            and dist["trace_count"] == 2),
+    }
+
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("obs_report_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

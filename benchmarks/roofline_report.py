@@ -1,9 +1,20 @@
-"""Render the §Roofline table from experiments/dryrun/*.json.
+"""Render roofline tables: dryrun analytic model and/or measured spans.
 
-Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod]
-Prints a markdown table (pasted into EXPERIMENTS.md §Roofline) with the
-three terms, the bottleneck, MODEL_FLOPS/HLO_FLOPS and the roofline
-fraction per (arch x shape) cell.
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod]
+      Markdown table (pasted into EXPERIMENTS.md §Roofline) from
+      experiments/dryrun/*.json: the three analytic terms, the
+      bottleneck, MODEL_FLOPS/HLO_FLOPS and the roofline fraction per
+      (arch x shape) cell.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report --obs BENCH_0006.json
+      Predicted-vs-measured table for the query hot path: the analytic
+      per-stage cost model (work-shares derived from the bench's
+      ``query_shape``) against the *measured* span timings the obs layer
+      recorded (DESIGN.md §13). Columns: measured p50/p99, measured share
+      of the end-to-end query span, predicted share, and the ratio — a
+      stage whose measured share runs far above its predicted share is
+      the one off its roofline.
 """
 
 import argparse
@@ -13,6 +24,12 @@ import os
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+
+# ordered stages of the query hot path (span metric names, DESIGN.md §13)
+OBS_STAGES = ("repro.engine.hash_encode", "repro.engine.directory_match",
+              "repro.engine.segmented_gather", "repro.engine.re_rank",
+              "repro.engine.top_k")
+OBS_TOTAL = "repro.engine.query"
 
 
 def load(mesh: str, dryrun_dir: str = DRYRUN_DIR):
@@ -32,13 +49,76 @@ def fmt_s(x):
     return f"{x * 1e6:.0f}us"
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
-    ap.add_argument("--dir", default=DRYRUN_DIR,
-                    help="dryrun dir (e.g. experiments/dryrun_baseline)")
-    args = ap.parse_args()
-    recs = load(args.mesh, args.dir)
+def predicted_stage_work(shape: dict) -> dict:
+    """Analytic op-count model of the bucket query path, in fused
+    multiply-add-equivalents per batch (same unit across stages, so the
+    *shares* are comparable; absolute seconds would need a machine peak).
+
+    q queries, n items, d dims, L code bits (W = L/32 packed words),
+    B buckets, P probed candidates, k results:
+
+      * hash_encode      — q*d*L projection MACs
+      * directory_match  — q*B*W popcount words + q*B*log2(B) ranking
+                           sort (word-ops stand in for MACs: both are one
+                           vector lane-op here)
+      * segmented_gather — q*P gather positions
+      * re_rank          — q*P*d exact-score MACs
+      * top_k            — q*P*log2(max(k, 2)) compare/exchange
+    """
+    import math
+
+    q, n, d = shape["q"], shape["n"], shape["d"]
+    L = shape["code_len"]
+    W = (L + 31) // 32
+    B = max(2, int(shape["num_buckets"]))
+    P = max(1.0, float(shape["probe_width"]))
+    k = max(2, int(shape.get("k", 10)))
+    return {
+        "repro.engine.hash_encode": q * d * L,
+        "repro.engine.directory_match": q * B * (W + math.log2(B)),
+        "repro.engine.segmented_gather": q * P,
+        "repro.engine.re_rank": q * P * d,
+        "repro.engine.top_k": q * P * math.log2(k),
+    }
+
+
+def obs_table(bench_path: str) -> None:
+    r = json.load(open(bench_path))
+    spans = r.get("spans", {})
+    shape = r.get("query_shape")
+    if not spans or shape is None:
+        raise SystemExit(f"{bench_path} has no spans/query_shape block — "
+                         f"need a benchmarks/obs_report.py BENCH json")
+    work = predicted_stage_work(shape)
+    total_work = sum(work.values())
+    meas = {s: spans[s]["p50"] for s in OBS_STAGES if s in spans}
+    total_meas = sum(meas.values())
+    print(f"query shape: q={shape['q']} n={shape['n']} d={shape['d']} "
+          f"code_len={shape['code_len']} buckets={shape['num_buckets']} "
+          f"probe_width={shape['probe_width']:.0f}")
+    print("| stage | measured p50 | p99 | measured share | predicted "
+          "share | meas/pred |")
+    print("|---|---|---|---|---|---|")
+    for s in OBS_STAGES:
+        if s not in spans:
+            continue
+        m_share = meas[s] / total_meas if total_meas else 0.0
+        p_share = work[s] / total_work
+        ratio = m_share / p_share if p_share else float("inf")
+        short = s.split(".")[-1]
+        print(f"| {short} | {fmt_s(spans[s]['p50'])} "
+              f"| {fmt_s(spans[s]['p99'])} | {m_share:.3f} "
+              f"| {p_share:.3f} | {ratio:.2f} |")
+    if OBS_TOTAL in spans:
+        covered = total_meas / spans[OBS_TOTAL]["p50"] \
+            if spans[OBS_TOTAL]["p50"] else 0.0
+        print(f"| query (end-to-end) | {fmt_s(spans[OBS_TOTAL]['p50'])} "
+              f"| {fmt_s(spans[OBS_TOTAL]['p99'])} | 1.000 | - "
+              f"| stage coverage {covered:.2f} |")
+
+
+def dryrun_table(mesh: str, dryrun_dir: str) -> None:
+    recs = load(mesh, dryrun_dir)
     print(f"| arch | shape | compute | memory | collective | bottleneck "
           f"| useful/HLO | roofline frac |")
     print("|---|---|---|---|---|---|---|---|")
@@ -52,6 +132,22 @@ def main():
               f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
               f"| {t['bottleneck'].replace('_s', '')} "
               f"| {ratio_s} | {t['roofline_fraction']:.3f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--dir", default=DRYRUN_DIR,
+                    help="dryrun dir (e.g. experiments/dryrun_baseline)")
+    ap.add_argument("--obs", default=None, metavar="BENCH_JSON",
+                    help="obs_report BENCH json: print predicted-vs-"
+                         "measured per-stage table instead of the dryrun "
+                         "table")
+    args = ap.parse_args()
+    if args.obs:
+        obs_table(args.obs)
+    else:
+        dryrun_table(args.mesh, args.dir)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.catalyst_bench",
     "benchmarks.distributed_bench",
     "benchmarks.planner_bench",
+    "benchmarks.obs_report",
     "benchmarks.lsh_decode",
 ]
 

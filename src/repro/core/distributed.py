@@ -62,6 +62,8 @@ from repro.core.index import ComposedMultiTable, IndexSpec, _check_probe
 from repro.core.index import build as build_spec
 from repro.core.probe import DEFAULT_EPS
 from repro.kernels import ops
+from repro.obs.trace import span_or_null
+from repro.obs.tracker import resolve_tracker
 
 ALIGNMENTS = ("bucket", "range")
 
@@ -401,12 +403,19 @@ class DistributedEngine:
       impl:   kernel dispatch; None takes the spec's.
       query_axis: optional second mesh axis sharding the query batch
               (2-D decomposition; merge traffic drops by its size).
+      tracker: optional :class:`repro.obs.Tracker` (None = ambient
+              default). Records encode/collective spans, query counters,
+              and jitted-collective cache hit/miss + trace-count — all
+              host-side, outside the shard_map, so results stay
+              bit-identical (parity-tested). Stage timings inside the
+              collective are not separable (one jitted program); the
+              collective span measures it end-to-end.
     """
 
     def __init__(self, index: ShardedIndex, mesh: Mesh, *,
                  axis="data", engine: Optional[str] = None,
                  impl: Optional[str] = None,
-                 query_axis: Optional[str] = None):
+                 query_axis: Optional[str] = None, tracker=None):
         self.axis = _axis_tuple(axis)
         if _mesh_shards(mesh, self.axis) != index.num_shards:
             raise ValueError(
@@ -423,6 +432,7 @@ class DistributedEngine:
         self.impl = index.spec.impl if impl is None else impl
         self.query_axis = query_axis
         self.family = index.spec.resolve_family()
+        self.tracker = resolve_tracker(tracker)
         self._mapped_cache = {}
         self._range_counts_cache = None
 
@@ -445,8 +455,13 @@ class DistributedEngine:
         instead of re-tracing the collective."""
         key = (num_probe, k, budgets)
         fn = self._mapped_cache.get(key)
+        tr = self.tracker
         if fn is not None:
+            if tr is not None:
+                tr.count("repro.engine.distributed.jit_cache.hit")
             return fn
+        if tr is not None:
+            tr.count("repro.engine.distributed.jit_cache.miss")
         idx = self.index
         axis_sizes = tuple(self.mesh.shape[a] for a in self.axis)
         body = functools.partial(
@@ -467,6 +482,12 @@ class DistributedEngine:
             check_vma=False,
         ))
         self._mapped_cache[key] = fn
+        if tr is not None:
+            # trace count == distinct jitted collectives alive; a steady
+            # gauge under repeat traffic is the "no re-trace" regression
+            # signal (tests/test_distributed.py).
+            tr.gauge("repro.engine.distributed.trace_count",
+                     len(self._mapped_cache))
         return fn
 
     def query(self, queries: jax.Array, k: int,
@@ -507,16 +528,27 @@ class DistributedEngine:
                 raise ValueError(
                     "pass num_probe, budgets or recall_target")
             num_probe = _check_probe(num_probe, k, idx.num_items)
-        q_codes = self.family.encode_queries(idx.params, queries,
-                                             impl=self.impl)
+        tr = self.tracker
+        with span_or_null(tr, "repro.engine.hash_encode") as sp:
+            q_codes = sp.sync(self.family.encode_queries(
+                idx.params, queries, impl=self.impl))
         mapped = self._mapped(num_probe, int(k), budgets)
         # NOTE: re-rank uses the ORIGINAL queries (true inner products);
         # the family transform only affects the hash codes.
-        return mapped(q_codes, queries, idx.params, idx.dir_code,
-                      idx.dir_rid, idx.dir_size, idx.dir_shard,
-                      idx.dir_local_start, idx.rank, idx.items, idx.codes,
-                      idx.range_id, idx.bucket_of, idx.bucket_off,
-                      idx.perm, idx.valid)
+        with span_or_null(tr, "repro.engine.distributed.collective") as sp:
+            vals, ids = sp.sync(mapped(
+                q_codes, queries, idx.params, idx.dir_code,
+                idx.dir_rid, idx.dir_size, idx.dir_shard,
+                idx.dir_local_start, idx.rank, idx.items, idx.codes,
+                idx.range_id, idx.bucket_of, idx.bucket_off,
+                idx.perm, idx.valid))
+        if tr is not None:
+            tr.count("repro.engine.queries", queries.shape[0])
+            tr.observe("repro.engine.probe_width", num_probe)
+            if budgets is not None:
+                for j, b in enumerate(budgets):
+                    tr.observe(f"repro.engine.probes_used.range{j}", b)
+        return vals, ids
 
 
 # -- legacy shims (seed-era dense RANGE-LSH surface) --------------------------

@@ -41,6 +41,8 @@ from repro.core import hashing
 from repro.core.bucket_index import BucketIndex, build_bucket_index
 from repro.core.topk import rerank
 from repro.kernels import ops
+from repro.obs.trace import span_or_null
+from repro.obs.tracker import resolve_tracker
 
 ENGINES = ("auto", "dense", "bucket")
 
@@ -83,13 +85,15 @@ def _default_match(buckets: BucketIndex, impl: str):
 
 def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
                       num_probe: int, *, impl: str = "auto",
-                      match_fn=None) -> jax.Array:
+                      match_fn=None, tracker=None) -> jax.Array:
     """(Q, num_probe) candidate item ids via bucket traversal.
 
     Directory match -> per-bucket probe rank -> stable sort of B ranks ->
     segmented gather of the first ``num_probe`` items. ``num_probe`` must
     not exceed the item count. ``match_fn`` overrides the packed-Hamming
-    match counter (family-specific codes).
+    match counter (family-specific codes). ``tracker`` adds
+    directory_match / segmented_gather stage spans (device-synced, values
+    untouched).
     """
     num_probe = int(num_probe)
     if not 0 < num_probe <= buckets.num_items:
@@ -99,19 +103,23 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
                          f"(0, N={buckets.num_items}]")
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
-    matches = match_fn(q_codes, buckets.bucket_code)             # (Q, B)
-    bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
-    order = jnp.argsort(bucket_rank, axis=-1, stable=True)       # (Q, B)
-    # every bucket holds >= 1 item, so the first min(B, P) buckets cover
-    # the budget.
-    sel = order[:, :min(buckets.num_buckets, num_probe)]         # (Q, S)
-    sizes = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[sel]
-    starts = buckets.bucket_start[:-1][sel]
-    cum = jnp.concatenate(
-        [jnp.zeros((sel.shape[0], 1), jnp.int32),
-         jnp.cumsum(sizes, axis=-1, dtype=jnp.int32)], axis=-1)  # (Q, S+1)
-    csr_pos = ops.bucket_gather(cum, starts, num_probe, impl=impl)
-    return buckets.item_ids[csr_pos]
+    with span_or_null(tracker, "repro.engine.directory_match") as sp:
+        matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
+        bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
+        order = sp.sync(
+            jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
+    with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
+        # every bucket holds >= 1 item, so the first min(B, P) buckets
+        # cover the budget.
+        sel = order[:, :min(buckets.num_buckets, num_probe)]     # (Q, S)
+        sizes = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[sel]
+        starts = buckets.bucket_start[:-1][sel]
+        cum = jnp.concatenate(
+            [jnp.zeros((sel.shape[0], 1), jnp.int32),
+             jnp.cumsum(sizes, axis=-1, dtype=jnp.int32)],
+            axis=-1)                                             # (Q, S+1)
+        csr_pos = ops.bucket_gather(cum, starts, num_probe, impl=impl)
+        return sp.sync(buckets.item_ids[csr_pos])
 
 
 def check_budgets(budgets: Sequence[int], range_counts: np.ndarray
@@ -173,8 +181,8 @@ def planned_take(rid_o: jax.Array, sizes_o: jax.Array,
 def planned_bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
                               budgets: Sequence[int], *,
                               impl: str = "auto", match_fn=None,
-                              range_counts: Optional[np.ndarray] = None
-                              ) -> jax.Array:
+                              range_counts: Optional[np.ndarray] = None,
+                              tracker=None) -> jax.Array:
     """(Q, sum_j min(b_j, n_j)) candidates under per-range probe budgets
     (DESIGN.md §12): for each range j, the first ``min(b_j, n_j)`` items
     of range j in canonical ``(rank, CSR position)`` order, emitted in
@@ -187,27 +195,32 @@ def planned_bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     budgets, total = check_budgets(budgets, range_counts)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
-    matches = match_fn(q_codes, buckets.bucket_code)             # (Q, B)
-    bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
-    order = jnp.argsort(bucket_rank, axis=-1, stable=True)       # (Q, B)
-    sizes_o = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[order]
-    starts = buckets.bucket_start[:-1][order]
-    take = planned_take(buckets.bucket_rid[order], sizes_o, budgets)
-    # every query's takes sum to exactly ``total`` (each range always
-    # contributes its full effective budget), so no covering run is needed
-    cum = jnp.concatenate(
-        [jnp.zeros((q_codes.shape[0], 1), jnp.int32),
-         jnp.cumsum(take, axis=-1, dtype=jnp.int32)], axis=-1)
-    csr_pos = ops.bucket_gather(cum, starts, total, impl=impl)
-    return buckets.item_ids[csr_pos]
+    with span_or_null(tracker, "repro.engine.directory_match") as sp:
+        matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
+        bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
+        order = sp.sync(
+            jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
+    with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
+        sizes_o = (buckets.bucket_start[1:]
+                   - buckets.bucket_start[:-1])[order]
+        starts = buckets.bucket_start[:-1][order]
+        take = planned_take(buckets.bucket_rid[order], sizes_o, budgets)
+        # every query's takes sum to exactly ``total`` (each range always
+        # contributes its full effective budget), so no covering run is
+        # needed
+        cum = jnp.concatenate(
+            [jnp.zeros((q_codes.shape[0], 1), jnp.int32),
+             jnp.cumsum(take, axis=-1, dtype=jnp.int32)], axis=-1)
+        csr_pos = ops.bucket_gather(cum, starts, total, impl=impl)
+        return sp.sync(buckets.item_ids[csr_pos])
 
 
 def planned_dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
                              db_codes: jax.Array, range_id: jax.Array,
                              budgets: Sequence[int], *,
                              impl: str = "auto", match_fn=None,
-                             range_counts: Optional[np.ndarray] = None
-                             ) -> jax.Array:
+                             range_counts: Optional[np.ndarray] = None,
+                             tracker=None) -> jax.Array:
     """Dense-scan realization of the same per-range-budget contract as
     :func:`planned_bucket_candidates` — identical candidate id sequences
     (tested by the conformance suite)."""
@@ -218,25 +231,28 @@ def planned_dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     budgets, total = check_budgets(budgets, range_counts)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
-    matches = match_fn(q_codes, db_codes)                        # (Q, N)
-    item_rank = buckets.rank[range_id[None, :], matches]
-    rank_csr = item_rank[:, buckets.item_ids]
-    order = jnp.argsort(rank_csr, axis=-1, stable=True)          # (Q, N)
-    rid_o = range_id[buckets.item_ids][order]
-    # unit sizes make range_cum_before the within-range probe position
-    wpos = range_cum_before(rid_o, jnp.ones_like(rid_o), len(budgets))
-    keep = wpos < jnp.asarray(budgets, jnp.int32)[rid_o]
-    # exactly ``total`` kept per query; stable sort pulls them to the
-    # front in canonical order
-    sel = jnp.argsort(~keep, axis=-1, stable=True)[:, :total]
-    csr_pos = jnp.take_along_axis(order, sel, axis=-1)
-    return buckets.item_ids[csr_pos]
+    with span_or_null(tracker, "repro.engine.dense_match") as sp:
+        matches = match_fn(q_codes, db_codes)                    # (Q, N)
+        item_rank = buckets.rank[range_id[None, :], matches]
+        rank_csr = item_rank[:, buckets.item_ids]
+        order = sp.sync(
+            jnp.argsort(rank_csr, axis=-1, stable=True))         # (Q, N)
+    with span_or_null(tracker, "repro.engine.dense_select") as sp:
+        rid_o = range_id[buckets.item_ids][order]
+        # unit sizes make range_cum_before the within-range probe position
+        wpos = range_cum_before(rid_o, jnp.ones_like(rid_o), len(budgets))
+        keep = wpos < jnp.asarray(budgets, jnp.int32)[rid_o]
+        # exactly ``total`` kept per query; stable sort pulls them to the
+        # front in canonical order
+        sel = jnp.argsort(~keep, axis=-1, stable=True)[:, :total]
+        csr_pos = jnp.take_along_axis(order, sel, axis=-1)
+        return sp.sync(buckets.item_ids[csr_pos])
 
 
 def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
                      db_codes: jax.Array, range_id: jax.Array,
                      num_probe: int, *, impl: str = "auto",
-                     match_fn=None) -> jax.Array:
+                     match_fn=None, tracker=None) -> jax.Array:
     """(Q, num_probe) candidate ids via the dense scan, in the same
     canonical ``(rank, CSR position)`` order as :func:`bucket_candidates`.
 
@@ -246,12 +262,14 @@ def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     num_probe = int(num_probe)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
-    matches = match_fn(q_codes, db_codes)                        # (Q, N)
-    item_rank = buckets.rank[range_id[None, :], matches]
-    # reorder columns to CSR so the stable argsort ties on CSR position
-    rank_csr = item_rank[:, buckets.item_ids]
-    order = jnp.argsort(rank_csr, axis=-1, stable=True)
-    return buckets.item_ids[order[:, :num_probe]]
+    with span_or_null(tracker, "repro.engine.dense_match") as sp:
+        matches = match_fn(q_codes, db_codes)                    # (Q, N)
+        item_rank = buckets.rank[range_id[None, :], matches]
+        # reorder columns to CSR so the stable argsort ties on CSR position
+        rank_csr = item_rank[:, buckets.item_ids]
+        order = sp.sync(jnp.argsort(rank_csr, axis=-1, stable=True))
+    with span_or_null(tracker, "repro.engine.dense_select") as sp:
+        return sp.sync(buckets.item_ids[order[:, :num_probe]])
 
 
 # one-slot engine memo for the convenience surface (ComposedIndex.query /
@@ -264,20 +282,24 @@ _engine_memo: dict = {}
 
 
 def engine_for(index, *, engine: str, buckets=None,
-               impl: str = "auto") -> "QueryEngine":
+               impl: str = "auto", tracker=None) -> "QueryEngine":
     """A :class:`QueryEngine` over ``index``, memoized one-slot when no
-    prebuilt ``buckets`` are supplied."""
+    prebuilt ``buckets`` are supplied. The memo key includes the tracker
+    identity (the entry holds strong refs, so id() keys cannot alias
+    collected objects); the ambient default tracker is resolved *here* so
+    installing one redirects even already-memoized convenience paths."""
+    tracker = resolve_tracker(tracker)
     if buckets is not None:
         return QueryEngine(index, engine=engine, buckets=buckets,
-                           impl=impl)
-    key = (id(index), engine, impl)
+                           impl=impl, tracker=tracker)
+    key = (id(index), engine, impl, id(tracker))
     ent = _engine_memo.get(key)
     if ent is None:
-        eng = QueryEngine(index, engine=engine, impl=impl)
+        eng = QueryEngine(index, engine=engine, impl=impl, tracker=tracker)
         _engine_memo.clear()
-        _engine_memo[key] = (index, eng)
+        _engine_memo[key] = (index, tracker, eng)
         return eng
-    return ent[1]
+    return ent[-1]
 
 
 class QueryEngine:
@@ -294,10 +316,16 @@ class QueryEngine:
                here — a host-side O(N log N) one-time cost, so reuse the
                engine (or pass ``buckets``) across query batches.
       impl:    kernel dispatch ("auto" | "pallas" | "ref").
+      tracker: optional :class:`repro.obs.Tracker`; None falls back to the
+               ambient default (resolved once, at construction). Attaching
+               one adds stage spans + query counters, all recorded
+               host-side after device sync — results stay bit-identical
+               (parity-tested).
     """
 
     def __init__(self, index, *, engine: str = "auto",
-                 buckets: Optional[BucketIndex] = None, impl: str = "auto"):
+                 buckets: Optional[BucketIndex] = None, impl: str = "auto",
+                 tracker=None):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine: {engine!r}")
         if buckets is None:
@@ -308,6 +336,7 @@ class QueryEngine:
         self.engine = engine
         self.buckets = buckets
         self.impl = impl
+        self.tracker = resolve_tracker(tracker)
         self._range_counts_cache = None
 
     @property
@@ -343,17 +372,20 @@ class QueryEngine:
         ``P = sum_j min(b_j, n_j)``."""
         if (num_probe is None) == (budgets is None):
             raise ValueError("pass exactly one of num_probe/budgets")
-        q_codes = encode_queries(self.index, queries, impl=self.impl)
+        tr = self.tracker
+        with span_or_null(tr, "repro.engine.hash_encode") as sp:
+            q_codes = sp.sync(
+                encode_queries(self.index, queries, impl=self.impl))
         if budgets is not None:
             if self.engine == "bucket":
                 return planned_bucket_candidates(
                     self.buckets, q_codes, budgets, impl=self.impl,
                     match_fn=self._match_fn,
-                    range_counts=self._range_counts)
+                    range_counts=self._range_counts, tracker=tr)
             return planned_dense_candidates(
                 self.buckets, q_codes, self.index.codes, self._range_id,
                 budgets, impl=self.impl, match_fn=self._match_fn,
-                range_counts=self._range_counts)
+                range_counts=self._range_counts, tracker=tr)
         num_probe = int(num_probe)
         if not 0 < num_probe <= self.buckets.num_items:
             raise ValueError(f"num_probe={num_probe} outside "
@@ -361,10 +393,10 @@ class QueryEngine:
         if self.engine == "bucket":
             return bucket_candidates(self.buckets, q_codes, num_probe,
                                      impl=self.impl,
-                                     match_fn=self._match_fn)
+                                     match_fn=self._match_fn, tracker=tr)
         return dense_candidates(self.buckets, q_codes, self.index.codes,
                                 self._range_id, num_probe, impl=self.impl,
-                                match_fn=self._match_fn)
+                                match_fn=self._match_fn, tracker=tr)
 
     def query(self, queries: jax.Array, k: int,
               num_probe: Optional[int] = None, *,
@@ -384,8 +416,18 @@ class QueryEngine:
             budgets = resolve_budgets(
                 getattr(self.index, "calib", None), recall_target,
                 k=k).budgets
-        cand = self.candidates(queries, num_probe, budgets=budgets)
-        if not 0 < int(k) <= cand.shape[1]:
-            raise ValueError(f"k={k} outside (0, probed width "
-                             f"{cand.shape[1]}]")
-        return rerank(queries, self.index.items, cand, int(k))
+        tr = self.tracker
+        with span_or_null(tr, "repro.engine.query"):
+            cand = self.candidates(queries, num_probe, budgets=budgets)
+            if not 0 < int(k) <= cand.shape[1]:
+                raise ValueError(f"k={k} outside (0, probed width "
+                                 f"{cand.shape[1]}]")
+            vals, ids = rerank(queries, self.index.items, cand, int(k),
+                               tracker=tr)
+        if tr is not None:
+            tr.count("repro.engine.queries", queries.shape[0])
+            tr.observe("repro.engine.probe_width", cand.shape[1])
+            if budgets is not None:
+                for j, b in enumerate(budgets):
+                    tr.observe(f"repro.engine.probes_used.range{j}", b)
+        return vals, ids

@@ -79,6 +79,11 @@ class IndexSpec:
                  table).
       alsh_m/alsh_U/alsh_r: ALSH transform order / scaling / quantization
                  width overrides (None = the family's recommended values).
+      tracker:   optional :class:`repro.obs.Tracker` the built index's
+                 query surfaces report to (DESIGN.md §13). Excluded from
+                 equality/hash — attaching observability never changes
+                 what the spec *is* (jit-static identity included) or what
+                 queries return (parity-tested).
     """
 
     family: str = "simple"
@@ -94,6 +99,8 @@ class IndexSpec:
     alsh_m: Optional[int] = None
     alsh_U: Optional[float] = None
     alsh_r: Optional[float] = None
+    tracker: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     # -- derived -------------------------------------------------------------
 
@@ -292,7 +299,7 @@ class ComposedIndex(NamedTuple):
                 return self.probe_order(queries)[:, :num_probe]
         from repro.core.engine import engine_for
         eng = engine_for(self, engine=engine, buckets=buckets,
-                         impl=self.spec.impl)
+                         impl=self.spec.impl, tracker=self.spec.tracker)
         return eng.candidates(queries, num_probe, budgets=budgets)
 
     def query(self, queries: jax.Array, k: int,
@@ -328,7 +335,9 @@ class ComposedIndex(NamedTuple):
         if not 0 < int(k) <= cand.shape[1]:
             raise ValueError(f"k={k} outside (0, probed width "
                              f"{cand.shape[1]}]")
-        return rerank(queries, self.items, cand, int(k))
+        from repro.obs.tracker import resolve_tracker
+        return rerank(queries, self.items, cand, int(k),
+                      tracker=resolve_tracker(self.spec.tracker))
 
 
 class ComposedMultiTable(NamedTuple):

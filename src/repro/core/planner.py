@@ -361,7 +361,7 @@ def adaptive_query(engine, queries: jax.Array, k: int, *,
                    recall_target: Optional[float] = None,
                    budgets: Optional[Sequence[int]] = None,
                    num_probe: Optional[int] = None,
-                   chunk: int = 32
+                   chunk: int = 32, tracker=None
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Planned probing with provable per-query early termination.
 
@@ -377,6 +377,10 @@ def adaptive_query(engine, queries: jax.Array, k: int, *,
     order) while ``probes_used`` records the work actually done.
 
     Returns ``(vals, ids, probes_used)`` — (Q, k), (Q, k), (Q,).
+
+    ``tracker`` (default: the engine's) records per-query ``probes_used``
+    and adaptive-termination savings host-side after the loop completes —
+    the returned arrays are untouched.
     """
     index = engine.index
     if recall_target is not None:
@@ -448,4 +452,14 @@ def adaptive_query(engine, queries: jax.Array, k: int, *,
         state)
     _, vals, ids, used, _ = state
     ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    tr = tracker if tracker is not None else getattr(engine, "tracker",
+                                                     None)
+    if tr is not None:
+        used_host = np.asarray(jax.device_get(used))
+        for u in used_host:
+            tr.observe("repro.planner.probes_used", float(u))
+            tr.observe("repro.planner.adaptive_savings",
+                       float(P - u) / float(P))
+        tr.count("repro.planner.adaptive_queries", q)
+        tr.gauge("repro.planner.planned_width", P)
     return vals, ids, used

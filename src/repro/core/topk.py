@@ -7,6 +7,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import span_or_null
+
 
 def exact_mips(queries: jax.Array, items: jax.Array, k: int
                ) -> Tuple[jax.Array, jax.Array]:
@@ -15,17 +17,21 @@ def exact_mips(queries: jax.Array, items: jax.Array, k: int
     return jax.lax.top_k(scores, k)
 
 
-def rerank(queries: jax.Array, items: jax.Array, cand_ids: jax.Array, k: int
-           ) -> Tuple[jax.Array, jax.Array]:
+def rerank(queries: jax.Array, items: jax.Array, cand_ids: jax.Array, k: int,
+           *, tracker=None) -> Tuple[jax.Array, jax.Array]:
     """Exact re-rank of per-query candidates.
 
     ``cand_ids``: (Q, P) item indices (may repeat). Returns top-k values and
-    *item* ids (Q, k) by true inner product.
+    *item* ids (Q, k) by true inner product. ``tracker`` adds re_rank/top_k
+    stage spans (host-side sync points — only pass one from eager callers,
+    never from inside jitted code).
     """
-    cand = items[cand_ids]                                  # (Q, P, d)
-    scores = jnp.einsum("qd,qpd->qp", queries, cand)
-    vals, pos = jax.lax.top_k(scores, k)
-    ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    with span_or_null(tracker, "repro.engine.re_rank") as sp:
+        cand = items[cand_ids]                              # (Q, P, d)
+        scores = sp.sync(jnp.einsum("qd,qpd->qp", queries, cand))
+    with span_or_null(tracker, "repro.engine.top_k") as sp:
+        vals, pos = jax.lax.top_k(scores, k)
+        ids = sp.sync(jnp.take_along_axis(cand_ids, pos, axis=1))
     return vals, ids
 
 

@@ -32,9 +32,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(impl: str) -> str:
+# optional dispatch observability (DESIGN.md §13): when a tracker is
+# installed, every op call counts ``repro.kernels.dispatch.<op>.<impl>``.
+# Ops are called at TRACE time from jitted callers, so counts measure
+# traces/eager calls — which backend each op resolved to and how often new
+# programs are built — not per-batch executions.
+_dispatch_tracker = None
+
+
+def set_dispatch_tracker(tracker) -> None:
+    """Install (or clear, with None) the module-level dispatch tracker."""
+    global _dispatch_tracker
+    _dispatch_tracker = tracker
+
+
+def _resolve(impl: str, op: Optional[str] = None) -> str:
     if impl == "auto":
-        return "pallas" if _on_tpu() else "ref"
+        impl = "pallas" if _on_tpu() else "ref"
+    if op is not None and _dispatch_tracker is not None:
+        _dispatch_tracker.count(f"repro.kernels.dispatch.{op}.{impl}")
     return impl
 
 
@@ -57,7 +73,7 @@ def hash_encode(x: jax.Array, A: jax.Array,
     x: (N, d); A: (d, L); optional SIMPLE-LSH fold: tail (N,), a_tail (L,).
     Returns (N, ceil(L/32)) uint32.
     """
-    impl = _resolve(impl)
+    impl = _resolve(impl, "hash_encode")
     N, d = x.shape
     L = A.shape[1]
     if tail is None:
@@ -87,7 +103,7 @@ def hash_encode(x: jax.Array, A: jax.Array,
 def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     """All-pairs Hamming distances (Q, W) x (N, W) -> (Q, N) int32."""
-    impl = _resolve(impl)
+    impl = _resolve(impl, "hamming_scan")
     if impl == "ref":
         return _ref.hamming_ref(q_codes, db_codes)
     bq, bn = 64, 512
@@ -101,7 +117,7 @@ def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
 def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
               impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Exact top-k inner products: vals (Q, k) f32, ids (Q, k) int32."""
-    impl = _resolve(impl)
+    impl = _resolve(impl, "mips_topk")
     if impl == "ref":
         return _ref.mips_topk_ref(queries, items, k)
     bq, bn = 8, 256
@@ -127,7 +143,7 @@ def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
                  hash_bits: int, *, impl: str = "auto") -> jax.Array:
     """Bucket-directory match counts: (Q, W) x (B, W) -> (Q, B) int32
     ``l = hash_bits - hamming`` (the eq.-12 input)."""
-    impl = _resolve(impl)
+    impl = _resolve(impl, "bucket_match")
     if impl == "ref":
         return _ref.bucket_match_ref(q_codes, bucket_codes, hash_bits)
     bq, bb = 64, 512
@@ -144,7 +160,7 @@ def delta_scan(q_codes: jax.Array, delta_codes: jax.Array, live: jax.Array,
     """Delta-buffer scan: (Q, W) x (C, W) -> (Q, C) int32 match counts
     ``l = hash_bits - hamming`` with dead slots (``live`` falsy) fused to
     ``-1`` — the streaming merge ranks them last in one pass."""
-    impl = _resolve(impl)
+    impl = _resolve(impl, "delta_scan")
     if impl == "ref":
         return _ref.delta_scan_ref(q_codes, delta_codes, live, hash_bits)
     bq, bc = 64, 128
@@ -163,7 +179,7 @@ def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
     """Segmented candidate gather: CSR positions (Q, num_probe) of the
     first ``num_probe`` probed items, given per-query probe-ordered bucket
     runs as (cum (Q, S+1), starts (Q, S)) int32 arrays."""
-    impl = _resolve(impl)
+    impl = _resolve(impl, "bucket_gather")
     if impl == "ref":
         return _ref.bucket_gather_ref(cum, starts, num_probe)
     bq = 8

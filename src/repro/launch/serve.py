@@ -38,6 +38,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import lm, lm_head
+from repro.obs.trace import span_or_null
+from repro.obs.tracker import resolve_tracker
 from repro.parallel import sharding as shd
 
 FSDP_SERVE_THRESHOLD = 2e10  # params above this serve with FSDP+TP
@@ -226,6 +228,14 @@ class BatchedServer:
     budget (DESIGN.md §12): the head index must carry planner
     calibration, and the budget (per-range for the sharded head, scalar
     for the streaming/frozen heads) is resolved once at construction.
+
+    ``tracker`` (a :class:`repro.obs.Tracker`; None = ambient default)
+    instruments the serving loop — per-step batch size, prefill /
+    decode-step / topk-head latency spans, insert/delete throughput, and
+    the decode step's jit-cache size — and is handed down to the
+    distributed head engine (cache hit/miss + trace count) and to the
+    streaming index (structural events) when they carry none of their
+    own. All host-side; generated tokens are unchanged.
     """
 
     def __init__(self, cfg: ModelConfig, params, mesh: Mesh, *,
@@ -236,12 +246,17 @@ class BatchedServer:
                  streaming_index: Optional[Any] = None,
                  sharded_index: Optional[Any] = None,
                  token_map=None,
-                 recall_target: Optional[float] = None):
+                 recall_target: Optional[float] = None,
+                 tracker=None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.max_seq = max_seq
         self.batch = batch
+        self.tracker = resolve_tracker(tracker)
+        if streaming_index is not None and self.tracker is not None \
+                and streaming_index.tracker is None:
+            streaming_index.set_tracker(self.tracker)
         self.lsh_decode = lsh_decode and streaming_index is None \
             and sharded_index is None
         self.vocab_index = vocab_index
@@ -297,7 +312,8 @@ class BatchedServer:
                     "build the index over vocab rows (id == token id)")
             placed = shard_index(sharded_index, mesh, axis=MODEL_AXIS)
             self.sharded_index = placed
-            self._dist = DistributedEngine(placed, mesh, axis=MODEL_AXIS)
+            self._dist = DistributedEngine(placed, mesh, axis=MODEL_AXIS,
+                                           tracker=self.tracker)
             self.decode_fn = make_decode_step(cfg, mesh,
                                               return_hidden=True)
             return
@@ -375,6 +391,9 @@ class BatchedServer:
                                "(was the index mutated directly?)")
         self._token_map = np.concatenate([self._token_map, token_ids])
         self._token_map_dev = jnp.asarray(self._token_map)
+        if self.tracker is not None:
+            self.tracker.count("repro.serve.inserted_tokens",
+                               token_ids.shape[0])
         return ids
 
     def delete_tokens(self, ids) -> None:
@@ -382,6 +401,9 @@ class BatchedServer:
         if self.streaming_index is None:
             raise ValueError("server was not built with a streaming_index")
         self.streaming_index.delete(ids)
+        if self.tracker is not None:
+            self.tracker.count("repro.serve.deleted_tokens",
+                               np.atleast_1d(np.asarray(ids)).size)
 
     def _streaming_topk(self, hidden: jax.Array) -> jax.Array:
         """Greedy token via the mutable head (monotone final softcaps
@@ -415,45 +437,72 @@ class BatchedServer:
 
     # -- generation ----------------------------------------------------------
 
+    def _head_token(self, hidden: jax.Array, unembed: jax.Array
+                    ) -> jax.Array:
+        """Greedy token via whichever LSH/exact head is mounted, timed as
+        the ``repro.serve.topk_head`` stage."""
+        with span_or_null(self.tracker, "repro.serve.topk_head") as sp:
+            if self.streaming_index is not None:
+                tok = self._streaming_topk(hidden)
+            elif self.sharded_index is not None:
+                tok = self._sharded_topk(hidden)
+            elif self.lsh_decode:
+                _, ids = lm_head.lsh_topk_tokens(
+                    self.vocab_index, hidden, unembed, k=1,
+                    num_probe=self.num_probe,
+                    final_softcap=self.cfg.final_softcap,
+                    buckets=self._buckets)
+                tok = ids[:, 0]
+            else:
+                _, ids = lm_head.exact_topk_tokens(
+                    hidden, unembed, 1, self.cfg.final_softcap)
+                tok = ids[:, 0]
+            return sp.sync(tok)
+
     def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
         """prompts: (B, S0) int32 -> generated ids (B, steps)."""
         B, S0 = prompts.shape
-        last_hidden, pf_caches = lm.prefill(self.params, prompts, self.cfg)
+        tr = self.tracker
+        if tr is not None:
+            tr.gauge("repro.serve.batch_size", B)
+        with span_or_null(tr, "repro.serve.prefill") as sp:
+            last_hidden, pf_caches = lm.prefill(self.params, prompts,
+                                                self.cfg)
+            sp.sync(last_hidden)
         caches = lm.extend_cache(self.cfg, pf_caches, self.max_seq)
         # first generated token comes from the prefill's last hidden state
         unembed = (self.params["embed"].T if self.cfg.tie_embeddings
                    else self.params["unembed"])
-        if self.streaming_index is not None:
-            tok = self._streaming_topk(last_hidden)
-        elif self.sharded_index is not None:
-            tok = self._sharded_topk(last_hidden)
-        elif self.lsh_decode:
-            _, ids = lm_head.lsh_topk_tokens(
-                self.vocab_index, last_hidden, unembed, k=1,
-                num_probe=self.num_probe,
-                final_softcap=self.cfg.final_softcap,
-                buckets=self._buckets)
-            tok = ids[:, 0]
-        else:
-            _, ids = lm_head.exact_topk_tokens(
-                last_hidden, unembed, 1, self.cfg.final_softcap)
-            tok = ids[:, 0]
+        tok = self._head_token(last_hidden, unembed)
         out = [tok]
         for t in range(steps - 1):
             pos = jnp.asarray(S0 + t, jnp.int32)
             args = (self.params, tok, caches, pos)
-            if self.streaming_index is not None:
-                hidden, caches = self.decode_fn(*args)
-                tok = self._streaming_topk(hidden)
-            elif self.sharded_index is not None:
-                hidden, caches = self.decode_fn(*args)
-                tok = self._sharded_topk(hidden)
+            if self.streaming_index is not None \
+                    or self.sharded_index is not None:
+                with span_or_null(tr, "repro.serve.decode_step") as sp:
+                    hidden, caches = self.decode_fn(*args)
+                    sp.sync(hidden)
+                tok = self._head_token(hidden, unembed)
             elif self.lsh_decode:
-                (vals, ids), caches = self.decode_fn(*args,
-                                                     self._vidx_arrays)
-                tok = ids[:, 0]
+                # head fused into the jitted step: one span covers both
+                with span_or_null(tr, "repro.serve.decode_step") as sp:
+                    (vals, ids), caches = self.decode_fn(*args,
+                                                         self._vidx_arrays)
+                    tok = sp.sync(ids[:, 0])
             else:
-                logits, caches = self.decode_fn(*args)
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                with span_or_null(tr, "repro.serve.decode_step") as sp:
+                    logits, caches = self.decode_fn(*args)
+                    tok = sp.sync(
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
             out.append(tok)
+        if tr is not None:
+            tr.count("repro.serve.generated_tokens", B * steps)
+            cache_size = getattr(self.decode_fn, "_cache_size", None)
+            if callable(cache_size):
+                # jit executable cache of the decode step: growth across a
+                # steady-state session means shapes are churning (the
+                # recompile regression the streaming head is built to
+                # avoid)
+                tr.gauge("repro.serve.decode_jit_cache", cache_size())
         return jnp.stack(out, axis=1)

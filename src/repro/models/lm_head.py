@@ -40,6 +40,7 @@ from repro.core.index import index_bits
 from repro.core.partition import effective_upper, percentile_partition
 from repro.core.probe import DEFAULT_EPS, item_scores
 from repro.kernels import ops
+from repro.obs.trace import span_or_null
 
 
 class VocabIndex(NamedTuple):
@@ -122,7 +123,8 @@ def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
                     true_vocab: Optional[int] = None,
                     impl: str = "auto",
                     buckets=None,
-                    recall_target: Optional[float] = None
+                    recall_target: Optional[float] = None,
+                    tracker=None
                     ) -> Tuple[jax.Array, jax.Array]:
     """Approximate top-k tokens for hidden states (B, d).
 
@@ -142,6 +144,11 @@ def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
     head's recall contract (the scan is one global probe order, so the
     scalar curve applies; see ``calibrate_vocab_index``). Exactly one of
     the two may be passed; with neither, ``DEFAULT_NUM_PROBE`` applies.
+
+    ``tracker`` (a :class:`repro.obs.Tracker`) times the candidate scan
+    and re-rank stages — EAGER callers only: this function is also traced
+    inside jitted decode steps, where the default ``None`` keeps the
+    spans as compile-time no-ops.
     """
     if recall_target is not None:
         from repro.core.planner import check_contract_k, plan_global
@@ -165,29 +172,36 @@ def lsh_topk_tokens(index: VocabIndex, hidden: jax.Array,
         num_probe = plan_global(index.calib, recall_target).num_probe
     elif num_probe is None:
         num_probe = DEFAULT_NUM_PROBE
-    q = hashing.normalize(hidden.astype(jnp.float32))
-    zeros = jnp.zeros((q.shape[0],), q.dtype)
-    q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1], impl=impl)
-    if buckets is not None:
-        from repro.core.engine import bucket_candidates
-        cand = bucket_candidates(buckets, q_codes, num_probe, impl=impl)
-    else:
-        ham = ops.hamming_scan(q_codes, index.codes, impl=impl)   # (B, V)
-        scores = item_scores(index.upper, index.range_id, ham,
-                             index.hash_bits, index.eps)
-        if true_vocab is not None and true_vocab < index.codes.shape[0]:
-            scores = jnp.where(
-                jnp.arange(index.codes.shape[0]) < true_vocab,
-                scores, -jnp.inf)
-        _, cand = jax.lax.top_k(scores, num_probe)                # (B, P)
-    cand_vecs = jnp.take(unembed, cand, axis=1)               # (d,) gather
-    # unembed is (d, V): gather columns -> (d, B, P); contract d
-    logits = jnp.einsum("bd,dbp->bp", hidden.astype(jnp.float32),
-                        cand_vecs.astype(jnp.float32))
-    if true_vocab is not None:
-        logits = jnp.where(cand < true_vocab, logits, -jnp.inf)
-    vals, pos = jax.lax.top_k(logits, k)
-    ids = jnp.take_along_axis(cand, pos, axis=1)
+    with span_or_null(tracker, "repro.models.lm_head.candidates") as sp:
+        q = hashing.normalize(hidden.astype(jnp.float32))
+        zeros = jnp.zeros((q.shape[0],), q.dtype)
+        q_codes = ops.hash_encode(q, index.A[:-1], zeros, index.A[-1],
+                                  impl=impl)
+        if buckets is not None:
+            from repro.core.engine import bucket_candidates
+            cand = bucket_candidates(buckets, q_codes, num_probe, impl=impl)
+        else:
+            ham = ops.hamming_scan(q_codes, index.codes, impl=impl)  # (B, V)
+            scores = item_scores(index.upper, index.range_id, ham,
+                                 index.hash_bits, index.eps)
+            if true_vocab is not None and true_vocab < index.codes.shape[0]:
+                scores = jnp.where(
+                    jnp.arange(index.codes.shape[0]) < true_vocab,
+                    scores, -jnp.inf)
+            _, cand = jax.lax.top_k(scores, num_probe)               # (B, P)
+        cand = sp.sync(cand)
+    with span_or_null(tracker, "repro.models.lm_head.re_rank") as sp:
+        cand_vecs = jnp.take(unembed, cand, axis=1)           # (d,) gather
+        # unembed is (d, V): gather columns -> (d, B, P); contract d
+        logits = jnp.einsum("bd,dbp->bp", hidden.astype(jnp.float32),
+                            cand_vecs.astype(jnp.float32))
+        if true_vocab is not None:
+            logits = jnp.where(cand < true_vocab, logits, -jnp.inf)
+        vals, pos = jax.lax.top_k(logits, k)
+        ids = sp.sync(jnp.take_along_axis(cand, pos, axis=1))
+    if tracker is not None:
+        tracker.count("repro.models.lm_head.queries", hidden.shape[0])
+        tracker.observe("repro.models.lm_head.num_probe", num_probe)
     if final_softcap is not None:   # monotone: order unchanged
         vals = final_softcap * jnp.tanh(vals / final_softcap)
     return vals, ids

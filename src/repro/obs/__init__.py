@@ -1,0 +1,33 @@
+"""Fleet-grade observability for the RANGE-LSH serving stack.
+
+Dependency-free tracker/span/sink subsystem (DESIGN.md §13). Everything is
+host-side python recorded after explicit device-sync boundaries, so
+attaching a tracker never changes traced programs or query results.
+
+Typical wiring::
+
+    from repro import obs
+    tracker = obs.Tracker(sinks=[obs.RingBufferSink(),
+                                 obs.JsonlSink("metrics.jsonl")])
+    eng = QueryEngine(index, tracker=tracker)      # explicit
+    obs.set_default_tracker(tracker)               # or ambient
+"""
+
+from repro.obs.audit import RecallAuditor
+from repro.obs.sinks import (JsonlSink, RingBufferSink, StdoutTableSink,
+                             format_table, read_jsonl)
+from repro.obs.trace import Span, Tracer, span_or_null
+from repro.obs.tracker import (DEFAULT_QUANTILES, HIST_GROWTH, HIST_HI,
+                               HIST_LO, LogHistogram, Tracker,
+                               default_tracker, resolve_tracker,
+                               set_default_tracker)
+
+__all__ = [
+    "Tracker", "LogHistogram", "HIST_GROWTH", "HIST_LO", "HIST_HI",
+    "DEFAULT_QUANTILES",
+    "Span", "Tracer", "span_or_null",
+    "RingBufferSink", "JsonlSink", "StdoutTableSink", "read_jsonl",
+    "format_table",
+    "RecallAuditor",
+    "set_default_tracker", "default_tracker", "resolve_tracker",
+]

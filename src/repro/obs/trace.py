@@ -1,0 +1,118 @@
+"""Span-based tracing of the query hot path (DESIGN.md §13).
+
+A span times one stage — ``hash_encode``, ``directory_match``,
+``segmented_gather``, ``re_rank``, ``top_k`` — with an *explicit
+device-sync boundary*: jax dispatch is asynchronous, so a wall-clock
+reading after an un-synced call measures dispatch latency, not the stage.
+Registering a sync value (``span(name, sync=x)`` or ``sp.sync(x)`` in the
+body) makes the span ``jax.block_until_ready`` it before reading the
+clock. Instrumentation never goes *inside* jitted code and never touches
+values — enabling tracing cannot change query results (parity-tested).
+
+Spans nest: the tracer keeps a stack and emits each span with its full
+``path`` (``/``-joined ancestry), so the per-stage breakdown of a
+``repro.engine.query`` parent is reconstructable from the record stream.
+Durations also land in the tracker histogram named by the span, giving
+p50/p90/p99 stage timings for free (``benchmarks/roofline_report.py
+--obs`` consumes exactly these).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+
+class Span:
+    """One timed stage; use via ``with tracker.span(name) as sp:``."""
+
+    __slots__ = ("name", "tracer", "_sync", "t_start", "duration", "path",
+                 "depth")
+
+    def __init__(self, tracer: "Tracer", name: str, sync: Any = None):
+        self.tracer = tracer
+        self.name = name
+        self._sync = sync
+        self.t_start: Optional[float] = None
+        self.duration: Optional[float] = None
+        self.path: Optional[str] = None
+        self.depth: Optional[int] = None
+
+    def sync(self, value: Any) -> Any:
+        """Register the value whose device completion ends this span;
+        returns it unchanged so it can wrap the producing expression."""
+        self._sync = value
+        return value
+
+    def __enter__(self) -> "Span":
+        self.tracer._push(self)
+        self.t_start = self.tracer.tracker.clock()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        try:
+            if exc_type is None and self._sync is not None:
+                import jax
+                jax.block_until_ready(self._sync)
+        finally:
+            self.duration = self.tracer.tracker.clock() - self.t_start
+            self.tracer._pop(self, failed=exc_type is not None)
+
+
+class Tracer:
+    """Span factory + nesting stack for one tracker."""
+
+    def __init__(self, tracker):
+        self.tracker = tracker
+        self._stack: List[Span] = []
+
+    def span(self, name: str, *, sync: Any = None) -> Span:
+        return Span(self, name, sync=sync)
+
+    def _push(self, span: Span) -> None:
+        span.depth = len(self._stack)
+        span.path = "/".join([s.name for s in self._stack] + [span.name])
+        self._stack.append(span)
+
+    def _pop(self, span: Span, *, failed: bool) -> None:
+        # unwind even on exceptions; tolerate out-of-order exits from
+        # misuse rather than corrupting the stack
+        while self._stack and self._stack[-1] is not span:
+            self._stack.pop()
+        if self._stack:
+            self._stack.pop()
+        if failed:
+            return
+        tr = self.tracker
+        h = tr.hists.get(span.name)
+        if h is None:
+            from repro.obs.tracker import LogHistogram
+            h = tr.hists[span.name] = LogHistogram()
+        h.record(span.duration)
+        tr._emit({"type": "span", "name": span.name, "path": span.path,
+                  "depth": span.depth, "dur_s": span.duration})
+
+
+class _NullSpan:
+    """No-tracker fast path: zero bookkeeping, ``sync`` is identity."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+    @staticmethod
+    def sync(value):
+        return value
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def span_or_null(tracker, name: str, *, sync: Any = None):
+    """``tracker.span(name)`` when a tracker is attached, else a shared
+    no-op context — the instrumentation idiom for hot paths where
+    ``tracker`` is usually None."""
+    if tracker is None:
+        return _NULL_SPAN
+    return tracker.span(name, sync=sync)

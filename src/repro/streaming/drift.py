@@ -101,3 +101,23 @@ class DriftMonitor:
                  if (b := float(self.baseline_q95[j])) > 0 and 0.95 in v}
         return {"counts": self.counts.tolist(),
                 "recent_q95_over_baseline": drift}
+
+    def report(self, tracker, *, prefix: str = "repro.streaming.drift"
+               ) -> None:
+        """Route the snapshot through a :class:`repro.obs.Tracker` as
+        typed metrics instead of an ad-hoc dict: per-range occupancy and
+        windowed norm-quantile gauges plus one ``<prefix>.snapshot``
+        event carrying the full picture (DESIGN.md §13)."""
+        if tracker is None:
+            return
+        recent = self.quantiles()
+        for j in range(self.m):
+            tracker.gauge(f"{prefix}.count.range{j}",
+                          float(self.counts[j]))
+            for q, v in recent.get(j, {}).items():
+                tracker.gauge(f"{prefix}.q{round(q * 100):d}.range{j}", v)
+        snap = self.snapshot()
+        tracker.event(f"{prefix}.snapshot", counts=snap["counts"],
+                      recent_q95_over_baseline={
+                          str(j): v for j, v in
+                          snap["recent_q95_over_baseline"].items()})

@@ -38,6 +38,8 @@ from repro.core.bucket_index import BucketIndex, rank_from_scores
 from repro.core.engine import select_engine
 from repro.core.family import HashFamily, SimpleLSHFamily
 from repro.core.probe import DEFAULT_EPS
+from repro.obs.trace import span_or_null
+from repro.obs.tracker import resolve_tracker
 from repro.streaming.delta import DeltaBuffer, directory_keys
 from repro.streaming.drift import (DEFAULT_MIN_SKEW_COUNT,
                                    DEFAULT_SKEW_RATIO, DriftMonitor)
@@ -133,9 +135,11 @@ class MutableIndex:
                  engine: str = "auto", impl: str = "auto",
                  csr: Optional[_CSR] = None,
                  delta: Optional[DeltaBuffer] = None, tomb_csr: int = 0,
-                 family: Optional[HashFamily] = None):
+                 family: Optional[HashFamily] = None, tracker=None):
         if repartition_policy not in ("localized", "full"):
             raise ValueError(f"unknown policy {repartition_policy!r}")
+        # observability first: structural paths below may emit events
+        self.tracker = resolve_tracker(tracker)
         self.family = SimpleLSHFamily() if family is None else family
         if not self.family.packed:
             raise ValueError(
@@ -290,6 +294,9 @@ class MutableIndex:
         j = self.monitor.skew_range()
         if j is not None and j not in self._skew_muted:
             self._rebalance(j)
+        if self.tracker is not None:
+            self.tracker.count("repro.streaming.inserts", k)
+            self.tracker.observe("repro.streaming.insert_batch", k)
         return ids
 
     def delete(self, ids) -> None:
@@ -325,6 +332,8 @@ class MutableIndex:
         if delta_hits:
             self.delta._sync()
         self._push_live()
+        if self.tracker is not None:
+            self.tracker.count("repro.streaming.deletes", ids_arr.size)
         if self.tomb_csr > self.max_tombstones:
             self.compact()
 
@@ -431,10 +440,18 @@ class MutableIndex:
                         self.num_csr_items + self.delta.capacity)
         if num_probe <= 0:
             raise ValueError("num_probe must be positive")
-        cand = self._candidates(queries, num_probe)
-        return merged_rerank(self.items, self.delta.items, self.live_dev,
-                             self.delta.live,
-                             jnp.asarray(queries, jnp.float32), cand, int(k))
+        tr = self.tracker
+        with span_or_null(tr, "repro.streaming.query") as sp:
+            cand = self._candidates(queries, num_probe)
+            vals, ids = merged_rerank(
+                self.items, self.delta.items, self.live_dev,
+                self.delta.live, jnp.asarray(queries, jnp.float32), cand,
+                int(k))
+            sp.sync(ids)
+        if tr is not None:
+            tr.count("repro.streaming.queries", queries.shape[0])
+            tr.observe("repro.streaming.probe_width", num_probe)
+        return vals, ids
 
     def live_vectors(self) -> Tuple[jax.Array, np.ndarray]:
         """(live item vectors, matching global ids) — storage rows first,
@@ -449,6 +466,9 @@ class MutableIndex:
         return vecs, gids
 
     def stats(self) -> dict:
+        # polling stats is the drift-reporting moment: quantiles also go
+        # out as typed gauges/events when a tracker is attached
+        self.monitor.report(self.tracker)
         return {
             "live": self.live_count,
             "store_rows": self.store_size,
@@ -465,8 +485,18 @@ class MutableIndex:
 
     # -- internals -----------------------------------------------------------
 
+    def set_tracker(self, tracker) -> None:
+        """Attach (or detach, with None) a :class:`repro.obs.Tracker`."""
+        self.tracker = tracker
+
     def _event(self, kind: str, **info) -> None:
+        # the list stays the backward-compatible surface (parity-tested);
+        # a tracker additionally gets the event as a typed record — before
+        # PR 6 nothing consumed the list, so structural events silently
+        # piled up unexported when no one polled it.
         self.events.append(dict(kind=kind, **info))
+        if self.tracker is not None:
+            self.tracker.event(f"repro.streaming.{kind}", **info)
 
     def _assign(self, norms: np.ndarray) -> np.ndarray:
         if self.num_ranges == 1:
@@ -694,6 +724,10 @@ class MutableIndex:
         else:
             self.delta.refresh_order(self.dir_keys)
         self.num_repartitions += 1
+        # the repartition itself is an event (previously only its
+        # *triggers* — overflow_localized / skew_rebalance — were)
+        self._event("repartition", lo=lo, hi=hi,
+                    members=int(srows.size + dslots.size))
 
     def _refresh_rank(self) -> None:
         self.buckets = self.buckets._replace(rank=self._rank_table())

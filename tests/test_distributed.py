@@ -269,13 +269,20 @@ def test_mapped_cache_traces_once_per_budget(longtail_ds, monkeypatch):
     """Regression pin for the PR 4 executable cache: the shard_map body
     must trace exactly once per distinct (num_probe, k[, budgets]) —
     repeat traffic on the same budget hits the cache. Counted at the
-    source: the python body runs once per jit trace."""
+    source (the python body runs once per jit trace) AND through the obs
+    layer: the tracker's hit/miss counters and ``trace_count`` gauge must
+    tell the same story, so cache behavior is observable in production
+    where monkeypatching is not an option (DESIGN.md §13)."""
+    from repro.obs import Tracker
+
     mesh = make_local_mesh()
     spec = IndexSpec(family="simple", code_len=16, m=8)
     sidx = build(spec, longtail_ds.items[:400], KEY,
                  num_shards=mesh.shape["data"])
     placed = distributed.shard_index(sidx, mesh)
-    eng = distributed.DistributedEngine(placed, mesh, engine="bucket")
+    tracker = Tracker()
+    eng = distributed.DistributedEngine(placed, mesh, engine="bucket",
+                                        tracker=tracker)
 
     traces = []
     real_body = distributed._shard_query
@@ -291,9 +298,16 @@ def test_mapped_cache_traces_once_per_budget(longtail_ds, monkeypatch):
     eng.query(q, 5, 90)          # second pair: exactly one more trace
     assert len(traces) == 2, \
         f"expected 2 traces for 2 (num_probe, k) pairs, saw {len(traces)}"
+    c = tracker.counters
+    assert c.get("repro.engine.distributed.jit_cache.miss") == 2
+    assert c.get("repro.engine.distributed.jit_cache.hit") == 1
+    assert tracker.gauges["repro.engine.distributed.trace_count"] == 2
     eng.query(q, 5, budgets=(10, 10, 10, 10, 5, 5, 5, 5))
     eng.query(q, 5, budgets=(10, 10, 10, 10, 5, 5, 5, 5))
     assert len(traces) == 3, "planned budgets must key the cache too"
+    assert c.get("repro.engine.distributed.jit_cache.miss") == 3
+    assert c.get("repro.engine.distributed.jit_cache.hit") == 2
+    assert tracker.gauges["repro.engine.distributed.trace_count"] == 3
 
 
 # -- vocab-sharded LSH head ---------------------------------------------------
