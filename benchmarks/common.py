@@ -22,9 +22,16 @@ def bench_smoke() -> bool:
 
 
 def bench_json_path(root: str) -> str:
-    """Next free BENCH_<n>.json under ``root`` (temp dir in smoke mode)."""
+    """Next free BENCH_<n>.json under ``root`` (temp dir in smoke mode).
+
+    ``REPRO_BENCH_DIR`` overrides the output directory in smoke mode so a
+    CI run collects every smoke JSON in one place for the regression gate
+    (benchmarks/regress.py) and the artifact upload, instead of scattering
+    them across per-benchmark temp dirs."""
     if bench_smoke():
-        root = tempfile.mkdtemp(prefix="bench_smoke_")
+        root = os.environ.get("REPRO_BENCH_DIR") \
+            or tempfile.mkdtemp(prefix="bench_smoke_")
+        os.makedirs(root, exist_ok=True)
     n = 1
     while os.path.exists(os.path.join(root, f"BENCH_{n:04d}.json")):
         n += 1

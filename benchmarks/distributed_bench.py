@@ -42,6 +42,7 @@ from repro.core.distributed import DistributedEngine, build_sharded, \
 from repro.core.engine import QueryEngine
 from repro.core.index import IndexSpec, build
 from repro.data.synthetic import make_dataset
+from repro.obs import Tracker
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 K = 10
@@ -77,19 +78,46 @@ def main() -> None:
         emit(f"distributed_local_{eng_name}", us,
              f"recall={fmt(rec, 3)}|qps={fmt(Q * 1e6 / us, 1)}")
 
+    # each arm runs its own tracker (stand-in for one tracker per serving
+    # process); Tracker.merge folds them into one fleet view afterwards —
+    # the DESIGN.md §14 per-shard -> fleet rollup, so the JSON reports ONE
+    # merged latency histogram instead of per-arm fragments.
+    fleet = Tracker()
+    arm_trackers = {}
     shard_counts = [s for s in (1, 2, 4, 8) if s <= jax.device_count()]
     for S in shard_counts:
         sidx = build_sharded(spec, ds.items, key, S)
         mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
         placed = shard_index(sidx, mesh)
         for eng_name in ("bucket", "dense"):
-            eng = DistributedEngine(placed, mesh, engine=eng_name)
+            arm_tr = Tracker()
+            eng = DistributedEngine(placed, mesh, engine=eng_name,
+                                    tracker=arm_tr)
             us = time_call(lambda e=eng: e.query(ds.queries, K, PROBE))
             out["arms"][f"s{S}_{eng_name}"] = {
                 "shards": S, "us": round(us, 1),
                 "qps": round(Q * 1e6 / us, 1)}
+            arm_trackers[f"s{S}_{eng_name}"] = arm_tr
+            fleet.merge(arm_tr)
             emit(f"distributed_s{S}_{eng_name}", us,
                  f"shards={S}|qps={fmt(Q * 1e6 / us, 1)}")
+
+    snap = fleet.snapshot()
+    coll = snap["hists"].get("repro.engine.distributed.collective", {})
+    out["fleet"] = {
+        "arms_merged": len(arm_trackers),
+        "queries": int(snap["counters"].get("repro.engine.queries", 0)),
+        "jit_cache_misses": int(snap["counters"].get(
+            "repro.engine.distributed.jit_cache.miss", 0)),
+        "collective_span_merged": {
+            k: (round(v, 7) if isinstance(v, float) else v)
+            for k, v in coll.items()},
+        "note": "one Tracker.merge rollup across every arm's tracker — "
+                "counts sum, histograms merge bucket-exact",
+    }
+    emit("distributed_fleet_rollup", 0.0,
+         f"arms={len(arm_trackers)}|"
+         f"collective_n={coll.get('count', 0)}")
 
     path = bench_json_path(ROOT)
     with open(path, "w") as f:

@@ -50,36 +50,13 @@ def fmt_s(x):
 
 
 def predicted_stage_work(shape: dict) -> dict:
-    """Analytic op-count model of the bucket query path, in fused
-    multiply-add-equivalents per batch (same unit across stages, so the
-    *shares* are comparable; absolute seconds would need a machine peak).
+    """Analytic per-stage predicted flops of the bucket query path — the
+    shared device-cost model (``repro.obs.cost.query_stage_costs``, the
+    same one the engine attaches to its spans), flops term only, so the
+    *shares* are comparable across stages."""
+    from repro.obs import query_stage_costs
 
-    q queries, n items, d dims, L code bits (W = L/32 packed words),
-    B buckets, P probed candidates, k results:
-
-      * hash_encode      — q*d*L projection MACs
-      * directory_match  — q*B*W popcount words + q*B*log2(B) ranking
-                           sort (word-ops stand in for MACs: both are one
-                           vector lane-op here)
-      * segmented_gather — q*P gather positions
-      * re_rank          — q*P*d exact-score MACs
-      * top_k            — q*P*log2(max(k, 2)) compare/exchange
-    """
-    import math
-
-    q, n, d = shape["q"], shape["n"], shape["d"]
-    L = shape["code_len"]
-    W = (L + 31) // 32
-    B = max(2, int(shape["num_buckets"]))
-    P = max(1.0, float(shape["probe_width"]))
-    k = max(2, int(shape.get("k", 10)))
-    return {
-        "repro.engine.hash_encode": q * d * L,
-        "repro.engine.directory_match": q * B * (W + math.log2(B)),
-        "repro.engine.segmented_gather": q * P,
-        "repro.engine.re_rank": q * P * d,
-        "repro.engine.top_k": q * P * math.log2(k),
-    }
+    return {s: c["flops"] for s, c in query_stage_costs(shape).items()}
 
 
 def obs_table(bench_path: str) -> None:
@@ -89,31 +66,34 @@ def obs_table(bench_path: str) -> None:
     if not spans or shape is None:
         raise SystemExit(f"{bench_path} has no spans/query_shape block — "
                          f"need a benchmarks/obs_report.py BENCH json")
-    work = predicted_stage_work(shape)
-    total_work = sum(work.values())
+    from repro.obs import query_stage_costs
+
+    costs = query_stage_costs(shape)
+    total_work = sum(c["flops"] for c in costs.values())
     meas = {s: spans[s]["p50"] for s in OBS_STAGES if s in spans}
     total_meas = sum(meas.values())
     print(f"query shape: q={shape['q']} n={shape['n']} d={shape['d']} "
           f"code_len={shape['code_len']} buckets={shape['num_buckets']} "
           f"probe_width={shape['probe_width']:.0f}")
-    print("| stage | measured p50 | p99 | measured share | predicted "
-          "share | meas/pred |")
-    print("|---|---|---|---|---|---|")
+    print("| stage | measured p50 | p99 | pred flops | pred bytes "
+          "| measured share | predicted share | meas/pred |")
+    print("|---|---|---|---|---|---|---|---|")
     for s in OBS_STAGES:
         if s not in spans:
             continue
         m_share = meas[s] / total_meas if total_meas else 0.0
-        p_share = work[s] / total_work
+        p_share = costs[s]["flops"] / total_work
         ratio = m_share / p_share if p_share else float("inf")
         short = s.split(".")[-1]
         print(f"| {short} | {fmt_s(spans[s]['p50'])} "
-              f"| {fmt_s(spans[s]['p99'])} | {m_share:.3f} "
-              f"| {p_share:.3f} | {ratio:.2f} |")
+              f"| {fmt_s(spans[s]['p99'])} "
+              f"| {costs[s]['flops']:.3g} | {costs[s]['hbm_bytes']:.3g} "
+              f"| {m_share:.3f} | {p_share:.3f} | {ratio:.2f} |")
     if OBS_TOTAL in spans:
         covered = total_meas / spans[OBS_TOTAL]["p50"] \
             if spans[OBS_TOTAL]["p50"] else 0.0
         print(f"| query (end-to-end) | {fmt_s(spans[OBS_TOTAL]['p50'])} "
-              f"| {fmt_s(spans[OBS_TOTAL]['p99'])} | 1.000 | - "
+              f"| {fmt_s(spans[OBS_TOTAL]['p99'])} | - | - | 1.000 | - "
               f"| stage coverage {covered:.2f} |")
 
 

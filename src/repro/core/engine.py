@@ -41,6 +41,7 @@ from repro.core import hashing
 from repro.core.bucket_index import BucketIndex, build_bucket_index
 from repro.core.topk import rerank
 from repro.kernels import ops
+from repro.obs import cost
 from repro.obs.trace import span_or_null
 from repro.obs.tracker import resolve_tracker
 
@@ -103,12 +104,16 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
                          f"(0, N={buckets.num_items}]")
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
+    Q = q_codes.shape[0]
     with span_or_null(tracker, "repro.engine.directory_match") as sp:
+        sp.set_attrs(**cost.directory_match_cost(
+            Q, buckets.num_buckets, buckets.hash_bits))
         matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
         bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
         order = sp.sync(
             jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
     with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
+        sp.set_attrs(**cost.segmented_gather_cost(Q, num_probe))
         # every bucket holds >= 1 item, so the first min(B, P) buckets
         # cover the budget.
         sel = order[:, :min(buckets.num_buckets, num_probe)]     # (Q, S)
@@ -195,12 +200,16 @@ def planned_bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     budgets, total = check_budgets(budgets, range_counts)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
+    Q = q_codes.shape[0]
     with span_or_null(tracker, "repro.engine.directory_match") as sp:
+        sp.set_attrs(**cost.directory_match_cost(
+            Q, buckets.num_buckets, buckets.hash_bits))
         matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
         bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
         order = sp.sync(
             jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
     with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
+        sp.set_attrs(**cost.segmented_gather_cost(Q, total))
         sizes_o = (buckets.bucket_start[1:]
                    - buckets.bucket_start[:-1])[order]
         starts = buckets.bucket_start[:-1][order]
@@ -231,13 +240,17 @@ def planned_dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     budgets, total = check_budgets(budgets, range_counts)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
+    Q = q_codes.shape[0]
     with span_or_null(tracker, "repro.engine.dense_match") as sp:
+        sp.set_attrs(**cost.dense_match_cost(
+            Q, buckets.num_items, buckets.hash_bits))
         matches = match_fn(q_codes, db_codes)                    # (Q, N)
         item_rank = buckets.rank[range_id[None, :], matches]
         rank_csr = item_rank[:, buckets.item_ids]
         order = sp.sync(
             jnp.argsort(rank_csr, axis=-1, stable=True))         # (Q, N)
     with span_or_null(tracker, "repro.engine.dense_select") as sp:
+        sp.set_attrs(**cost.dense_select_cost(Q, buckets.num_items))
         rid_o = range_id[buckets.item_ids][order]
         # unit sizes make range_cum_before the within-range probe position
         wpos = range_cum_before(rid_o, jnp.ones_like(rid_o), len(budgets))
@@ -262,13 +275,17 @@ def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
     num_probe = int(num_probe)
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
+    Q = q_codes.shape[0]
     with span_or_null(tracker, "repro.engine.dense_match") as sp:
+        sp.set_attrs(**cost.dense_match_cost(
+            Q, buckets.num_items, buckets.hash_bits))
         matches = match_fn(q_codes, db_codes)                    # (Q, N)
         item_rank = buckets.rank[range_id[None, :], matches]
         # reorder columns to CSR so the stable argsort ties on CSR position
         rank_csr = item_rank[:, buckets.item_ids]
         order = sp.sync(jnp.argsort(rank_csr, axis=-1, stable=True))
     with span_or_null(tracker, "repro.engine.dense_select") as sp:
+        sp.set_attrs(**cost.dense_select_cost(Q, buckets.num_items))
         return sp.sync(buckets.item_ids[order[:, :num_probe]])
 
 
@@ -374,6 +391,9 @@ class QueryEngine:
             raise ValueError("pass exactly one of num_probe/budgets")
         tr = self.tracker
         with span_or_null(tr, "repro.engine.hash_encode") as sp:
+            sp.set_attrs(**cost.hash_encode_cost(
+                queries.shape[0], queries.shape[1],
+                getattr(self.index, "code_len", self.buckets.hash_bits)))
             q_codes = sp.sync(
                 encode_queries(self.index, queries, impl=self.impl))
         if budgets is not None:

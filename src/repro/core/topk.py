@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import cost
 from repro.obs.trace import span_or_null
 
 
@@ -26,10 +27,13 @@ def rerank(queries: jax.Array, items: jax.Array, cand_ids: jax.Array, k: int,
     stage spans (host-side sync points — only pass one from eager callers,
     never from inside jitted code).
     """
+    Q, P = cand_ids.shape
     with span_or_null(tracker, "repro.engine.re_rank") as sp:
+        sp.set_attrs(**cost.re_rank_cost(Q, P, queries.shape[1]))
         cand = items[cand_ids]                              # (Q, P, d)
         scores = sp.sync(jnp.einsum("qd,qpd->qp", queries, cand))
     with span_or_null(tracker, "repro.engine.top_k") as sp:
+        sp.set_attrs(**cost.top_k_cost(Q, P, k))
         vals, pos = jax.lax.top_k(scores, k)
         ids = sp.sync(jnp.take_along_axis(cand_ids, pos, axis=1))
     return vals, ids

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.obs import cost as _cost
 from repro.kernels.bucket_probe import (bucket_gather_pallas,
                                         bucket_match_pallas)
 from repro.kernels.delta_scan import delta_scan_pallas
@@ -54,6 +55,19 @@ def _resolve(impl: str, op: Optional[str] = None) -> str:
     return impl
 
 
+def _charge(op: str, cost_fn, *args) -> None:
+    """Accumulate the analytic device cost of one op dispatch
+    (``repro.kernels.cost.<op>.{flops,hbm_bytes}``, repro/obs/cost.py) —
+    the per-op complement of the engine's per-span cost attrs. Lazy like
+    the dispatch counters: nothing is computed without a tracker."""
+    tr = _dispatch_tracker
+    if tr is None:
+        return
+    c = cost_fn(*args)
+    tr.count(f"repro.kernels.cost.{op}.flops", c["flops"])
+    tr.count(f"repro.kernels.cost.{op}.hbm_bytes", c["hbm_bytes"])
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     n = x.shape[axis]
     pad = (-n) % mult
@@ -76,6 +90,7 @@ def hash_encode(x: jax.Array, A: jax.Array,
     impl = _resolve(impl, "hash_encode")
     N, d = x.shape
     L = A.shape[1]
+    _charge("hash_encode", _cost.hash_encode_cost, N, d, L)
     if tail is None:
         tail = jnp.zeros((N,), x.dtype)
         a_tail = jnp.zeros((L,), x.dtype)
@@ -104,6 +119,8 @@ def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     """All-pairs Hamming distances (Q, W) x (N, W) -> (Q, N) int32."""
     impl = _resolve(impl, "hamming_scan")
+    _charge("hamming_scan", _cost.packed_scan_cost, q_codes.shape[0],
+            db_codes.shape[0], 32 * q_codes.shape[1])
     if impl == "ref":
         return _ref.hamming_ref(q_codes, db_codes)
     bq, bn = 64, 512
@@ -118,6 +135,10 @@ def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
               impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Exact top-k inner products: vals (Q, k) f32, ids (Q, k) int32."""
     impl = _resolve(impl, "mips_topk")
+    _charge("mips_topk", lambda q, n, d, kk: {
+        m: _cost.re_rank_cost(q, n, d)[m] + _cost.top_k_cost(q, n, kk)[m]
+        for m in ("flops", "hbm_bytes")},
+            queries.shape[0], items.shape[0], queries.shape[1], k)
     if impl == "ref":
         return _ref.mips_topk_ref(queries, items, k)
     bq, bn = 8, 256
@@ -144,6 +165,8 @@ def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
     """Bucket-directory match counts: (Q, W) x (B, W) -> (Q, B) int32
     ``l = hash_bits - hamming`` (the eq.-12 input)."""
     impl = _resolve(impl, "bucket_match")
+    _charge("bucket_match", _cost.packed_scan_cost, q_codes.shape[0],
+            bucket_codes.shape[0], hash_bits)
     if impl == "ref":
         return _ref.bucket_match_ref(q_codes, bucket_codes, hash_bits)
     bq, bb = 64, 512
@@ -161,6 +184,8 @@ def delta_scan(q_codes: jax.Array, delta_codes: jax.Array, live: jax.Array,
     ``l = hash_bits - hamming`` with dead slots (``live`` falsy) fused to
     ``-1`` — the streaming merge ranks them last in one pass."""
     impl = _resolve(impl, "delta_scan")
+    _charge("delta_scan", _cost.packed_scan_cost, q_codes.shape[0],
+            delta_codes.shape[0], hash_bits)
     if impl == "ref":
         return _ref.delta_scan_ref(q_codes, delta_codes, live, hash_bits)
     bq, bc = 64, 128
@@ -180,6 +205,8 @@ def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
     first ``num_probe`` probed items, given per-query probe-ordered bucket
     runs as (cum (Q, S+1), starts (Q, S)) int32 arrays."""
     impl = _resolve(impl, "bucket_gather")
+    _charge("bucket_gather", _cost.segmented_gather_cost,
+            cum.shape[0], num_probe)
     if impl == "ref":
         return _ref.bucket_gather_ref(cum, starts, num_probe)
     bq = 8

@@ -18,6 +18,7 @@ implementations:
 from __future__ import annotations
 
 import json
+import os
 from collections import deque
 from typing import Dict, Iterable, List, Optional
 
@@ -55,15 +56,43 @@ class RingBufferSink:
 
 class JsonlSink:
     """Append records to ``path`` as JSON lines (flushed per record by
-    default so a crashed process loses nothing)."""
+    default so a crashed process loses nothing).
 
-    def __init__(self, path: str, *, autoflush: bool = True):
+    ``max_bytes`` bounds disk growth under sustained traffic (the
+    open-loop load harness): when the live file would exceed it, the file
+    rotates to ``path + ".1"`` (replacing any previous rotation — exactly
+    one trailing file is kept) and a fresh ``path`` is opened, so a
+    long-running server holds at most ~``2 * max_bytes`` on disk.
+    ``rotations`` counts how often that happened; ``total`` counts every
+    record ever emitted (both surface in ``Tracker.snapshot()``)."""
+
+    def __init__(self, path: str, *, autoflush: bool = True,
+                 max_bytes: Optional[int] = None):
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.path = path
         self.autoflush = autoflush
+        self.max_bytes = max_bytes
+        self.total = 0
+        self.rotations = 0
+        self._bytes = os.path.getsize(path) if os.path.exists(path) else 0
         self._fh = open(path, "a")
 
+    def _rotate(self) -> None:
+        self._fh.close()
+        os.replace(self.path, self.path + ".1")
+        self._fh = open(self.path, "a")
+        self._bytes = 0
+        self.rotations += 1
+
     def emit(self, record: dict) -> None:
-        self._fh.write(json.dumps(record, default=_jsonable) + "\n")
+        line = json.dumps(record, default=_jsonable) + "\n"
+        if self.max_bytes is not None and self._bytes \
+                and self._bytes + len(line) > self.max_bytes:
+            self._rotate()
+        self._fh.write(line)
+        self._bytes += len(line)
+        self.total += 1
         if self.autoflush:
             self._fh.flush()
 
@@ -143,4 +172,11 @@ def format_table(snapshot: Dict) -> str:
               f"{s['max']:.3g}"]
              for k, s in sorted(snapshot.get("hists", {}).items())),
             ["name", "n", "mean", "p50", "p90", "p99", "max"])
+    # sink totals make silent overflow visible: a RingBufferSink that
+    # wrapped shows dropped > 0 right in the rollup instead of silently
+    # serving a truncated window
+    section("sinks",
+            ([s["sink"], str(s["records"]), str(s["dropped"])]
+             for s in snapshot.get("sinks", [])),
+            ["sink", "records", "dropped"])
     return "\n".join(lines) if lines else "(no metrics recorded)"

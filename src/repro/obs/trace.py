@@ -15,20 +15,29 @@ Spans nest: the tracer keeps a stack and emits each span with its full
 Durations also land in the tracker histogram named by the span, giving
 p50/p90/p99 stage timings for free (``benchmarks/roofline_report.py
 --obs`` consumes exactly these).
+
+Span records carry ``t0`` (start, seconds since tracker start) alongside
+``dur_s``, so ``repro.obs.export`` can rebuild exact begin/end pairs for
+Chrome ``trace_event`` output, and an optional ``attrs`` dict —
+``sp.set_attrs(flops=..., hbm_bytes=...)`` — the device-cost attribution
+the exporter forwards as trace-event args (DESIGN.md §14). A span whose
+body OR sync raises emits nothing: a failed device computation has no
+meaningful duration, and recording one would poison the stage histograms.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 class Span:
     """One timed stage; use via ``with tracker.span(name) as sp:``."""
 
     __slots__ = ("name", "tracer", "_sync", "t_start", "duration", "path",
-                 "depth")
+                 "depth", "attrs")
 
-    def __init__(self, tracer: "Tracer", name: str, sync: Any = None):
+    def __init__(self, tracer: "Tracer", name: str, sync: Any = None,
+                 attrs: Optional[Dict[str, Any]] = None):
         self.tracer = tracer
         self.name = name
         self._sync = sync
@@ -36,6 +45,7 @@ class Span:
         self.duration: Optional[float] = None
         self.path: Optional[str] = None
         self.depth: Optional[int] = None
+        self.attrs: Dict[str, Any] = dict(attrs) if attrs else {}
 
     def sync(self, value: Any) -> Any:
         """Register the value whose device completion ends this span;
@@ -43,19 +53,30 @@ class Span:
         self._sync = value
         return value
 
+    def set_attrs(self, **attrs: Any) -> None:
+        """Attach structured attributes (predicted flops/bytes, shapes,
+        ...) to this span's record; merged over earlier values."""
+        self.attrs.update(attrs)
+
     def __enter__(self) -> "Span":
         self.tracer._push(self)
         self.t_start = self.tracer.tracker.clock()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
+        failed = exc_type is not None
         try:
-            if exc_type is None and self._sync is not None:
+            if not failed and self._sync is not None:
                 import jax
                 jax.block_until_ready(self._sync)
+        except BaseException:
+            # a sync that raises mid-block_until_ready is a failed span:
+            # the duration would measure time-to-error, not the stage
+            failed = True
+            raise
         finally:
             self.duration = self.tracer.tracker.clock() - self.t_start
-            self.tracer._pop(self, failed=exc_type is not None)
+            self.tracer._pop(self, failed=failed)
 
 
 class Tracer:
@@ -65,8 +86,9 @@ class Tracer:
         self.tracker = tracker
         self._stack: List[Span] = []
 
-    def span(self, name: str, *, sync: Any = None) -> Span:
-        return Span(self, name, sync=sync)
+    def span(self, name: str, *, sync: Any = None,
+             attrs: Optional[Dict[str, Any]] = None) -> Span:
+        return Span(self, name, sync=sync, attrs=attrs)
 
     def _push(self, span: Span) -> None:
         span.depth = len(self._stack)
@@ -88,8 +110,12 @@ class Tracer:
             from repro.obs.tracker import LogHistogram
             h = tr.hists[span.name] = LogHistogram()
         h.record(span.duration)
-        tr._emit({"type": "span", "name": span.name, "path": span.path,
-                  "depth": span.depth, "dur_s": span.duration})
+        rec = {"type": "span", "name": span.name, "path": span.path,
+               "depth": span.depth, "t0": span.t_start - tr._t0,
+               "dur_s": span.duration}
+        if span.attrs:
+            rec["attrs"] = dict(span.attrs)
+        tr._emit(rec)
 
 
 class _NullSpan:
@@ -104,6 +130,10 @@ class _NullSpan:
     @staticmethod
     def sync(value):
         return value
+
+    @staticmethod
+    def set_attrs(**attrs):
+        return None
 
 
 _NULL_SPAN = _NullSpan()

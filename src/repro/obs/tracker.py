@@ -81,6 +81,31 @@ class LogHistogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def merge(self, other: "LogHistogram") -> "LogHistogram":
+        """Fold ``other`` into this histogram in place (returns self).
+
+        Merging is exact on the bucket counts — both histograms must share
+        the same bucket geometry (lo/growth/num_buckets), else ValueError —
+        so quantile error after a merge is the same ~sqrt(growth)-1 bound
+        as for a single histogram that saw every sample (tested). The
+        per-shard -> fleet rollup path (``Tracker.merge``) and the
+        distributed benchmark use this."""
+        if not isinstance(other, LogHistogram):
+            raise TypeError(f"cannot merge {type(other).__name__}")
+        if (self.lo != other.lo or self.growth != other.growth
+                or self.num_buckets != other.num_buckets):
+            raise ValueError(
+                f"bucket geometry mismatch: lo={self.lo}/{other.lo} "
+                f"growth={self.growth}/{other.growth} "
+                f"buckets={self.num_buckets}/{other.num_buckets}")
+        for b, c in enumerate(other.counts):
+            self.counts[b] += c
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
     def _edges(self, b: int) -> tuple:
         """(lo, hi) value edges of bucket ``b`` (bucket 0 = underflow)."""
         if b == 0:
@@ -175,24 +200,64 @@ class Tracker:
         self.events.append({"name": name, **fields})
         self._emit(rec)
 
-    def span(self, name: str, *, sync: Any = None):
+    def span(self, name: str, *, sync: Any = None, attrs=None):
         """Context manager timing a stage of the query hot path; see
         :class:`repro.obs.trace.Tracer`. ``sync`` (or ``sp.sync(x)`` in
         the body) marks the device-sync boundary — the span blocks on it
         before reading the clock, so timings measure finished device work,
-        not dispatch."""
-        return self.tracer.span(name, sync=sync)
+        not dispatch. ``attrs`` (or ``sp.set_attrs(...)``) attach
+        structured attributes — predicted flops/bytes — to the record."""
+        return self.tracer.span(name, sync=sync, attrs=attrs)
+
+    # -- fleet rollup: per-shard trackers -> one view ------------------------
+
+    def merge(self, other: "Tracker") -> "Tracker":
+        """Fold another tracker's aggregates into this one in place
+        (returns self): counters sum, gauges last-write (``other`` wins on
+        keys it carries), histograms merge bucket-exact
+        (:meth:`LogHistogram.merge` — mismatched geometries raise), events
+        append. Sinks and span state are NOT merged — merge is the
+        fleet-view aggregation step for per-shard / per-process trackers
+        (trace-level merging is ``repro.obs.export``'s job, which keeps
+        per-shard records separate under stable pids)."""
+        if not isinstance(other, Tracker):
+            raise TypeError(f"cannot merge {type(other).__name__}")
+        for k, v in other.counters.items():
+            self.counters[k] = self.counters.get(k, 0) + v
+        self.gauges.update(other.gauges)
+        for k, h in other.hists.items():
+            mine = self.hists.get(k)
+            if mine is None:
+                # clone the geometry field-for-field: recomputing the
+                # bucket count from hi through logs could drift one off
+                mine = LogHistogram(lo=h.lo, growth=h.growth)
+                mine.num_buckets = h.num_buckets
+                mine.counts = [0] * h.num_buckets
+                self.hists[k] = mine
+            mine.merge(h)
+        self.events.extend(other.events)
+        return self
 
     # -- rollup --------------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:
         """Current aggregate state: counters, gauges, histogram summaries
-        (count/mean/min/max/p50/p90/p99), event count."""
+        (count/mean/min/max/p50/p90/p99), event count, and per-sink
+        record/drop totals (sinks exposing ``total``/``dropped`` — the
+        silent-overflow visibility ``format_table`` renders)."""
+        sinks = []
+        for s in self.sinks:
+            total = getattr(s, "total", None)
+            if total is None:
+                continue
+            sinks.append({"sink": type(s).__name__, "records": int(total),
+                          "dropped": int(getattr(s, "dropped", 0))})
         return {
             "counters": dict(self.counters),
             "gauges": dict(self.gauges),
             "hists": {k: h.summary() for k, h in self.hists.items()},
             "num_events": len(self.events),
+            "sinks": sinks,
         }
 
     def flush(self) -> None:

@@ -70,6 +70,40 @@ def test_histogram_summary_keys():
     assert set(s) == {"count", "mean", "min", "max", "p50", "p90", "p99"}
 
 
+def test_histogram_merge_quantile_error_stays_bounded():
+    """Shard rollup contract: merging per-shard histograms is bucket-exact,
+    so quantiles of the merged view track numpy over the CONCATENATED
+    sample within the same geometric bound as a single histogram."""
+    rng = np.random.default_rng(3)
+    a = rng.lognormal(mean=-7.0, sigma=1.0, size=8_000)
+    b = rng.lognormal(mean=-5.5, sigma=0.7, size=4_000)   # shifted shard
+    ha, hb = LogHistogram(), LogHistogram()
+    for s in a:
+        ha.record(s)
+    for s in b:
+        hb.record(s)
+    merged = ha.merge(hb)
+    assert merged is ha                      # in-place, returns self
+    both = np.concatenate([a, b])
+    assert merged.count == both.size
+    assert merged.mean == pytest.approx(float(both.mean()), rel=1e-6)
+    assert merged.min == pytest.approx(float(both.min()))
+    assert merged.max == pytest.approx(float(both.max()))
+    for q in (0.5, 0.9, 0.99):
+        assert merged.quantile(q) == pytest.approx(
+            float(np.quantile(both, q)), rel=0.08), f"q={q}"
+
+
+def test_histogram_merge_mismatched_geometry_raises():
+    h = LogHistogram()
+    with pytest.raises(ValueError, match="geometry"):
+        h.merge(LogHistogram(growth=1.5))
+    with pytest.raises(ValueError, match="geometry"):
+        h.merge(LogHistogram(lo=1e-6))
+    with pytest.raises(TypeError):
+        h.merge([1.0, 2.0])
+
+
 # -- tracker surface ----------------------------------------------------------
 
 
@@ -97,6 +131,39 @@ def test_records_carry_monotonic_t():
     t.count("a")
     ts = [r["t"] for r in ring.records]
     assert ts == [1.0, 2.0]
+
+
+def test_tracker_merge_folds_aggregates():
+    """Per-shard -> fleet rollup: counters sum, gauges last-write (other
+    wins), histograms merge bucket-exact (including names only one side
+    has), events append; sinks stay local."""
+    ring = RingBufferSink()
+    fleet = Tracker([ring])
+    fleet.count("q", 2)
+    fleet.gauge("g", 1.0)
+    fleet.observe("lat", 0.010)
+    shard = Tracker()
+    shard.count("q", 3)
+    shard.count("only_shard")
+    shard.gauge("g", 9.0)
+    shard.observe("lat", 0.020)
+    shard.observe("only_shard_lat", 0.5)
+    shard.event("repro.streaming.repartition", range_id=2)
+    n_sink_records = ring.total
+    out = fleet.merge(shard)
+    assert out is fleet
+    assert fleet.counters["q"] == 5
+    assert fleet.counters["only_shard"] == 1
+    assert fleet.gauges["g"] == 9.0                    # other wins
+    assert fleet.hists["lat"].count == 2
+    assert fleet.hists["only_shard_lat"].count == 1
+    # the adopted histogram shares the shard's exact geometry
+    assert fleet.hists["only_shard_lat"].num_buckets == \
+        shard.hists["only_shard_lat"].num_buckets
+    assert fleet.events[-1]["name"] == "repro.streaming.repartition"
+    assert ring.total == n_sink_records                # merge emits nothing
+    with pytest.raises(TypeError):
+        fleet.merge({"counters": {}})
 
 
 # -- spans --------------------------------------------------------------------
@@ -145,6 +212,44 @@ def test_span_exception_drops_record_and_unwinds():
     assert t.hists["after"].count == 1
 
 
+def test_span_exception_mid_sync_drops_record(monkeypatch):
+    """A sync that fails inside ``block_until_ready`` is a failed span:
+    nothing recorded (the duration would measure time-to-error), the
+    exception propagates, and the tracer stack unwinds."""
+    import jax as jax_mod
+
+    def boom(x):
+        raise RuntimeError("device died")
+
+    ring = RingBufferSink()
+    t = Tracker([ring])
+    monkeypatch.setattr(jax_mod, "block_until_ready", boom)
+    with pytest.raises(RuntimeError, match="device died"):
+        with t.span("stage") as sp:
+            sp.sync(jnp.ones((2,)))
+    assert ring.query(type="span") == []
+    assert "stage" not in t.hists
+    assert t.tracer._stack == []
+    monkeypatch.undo()
+    with t.span("after") as sp:            # tracer still usable
+        sp.sync(jnp.ones((2,)))
+    assert t.hists["after"].count == 1
+
+
+def test_span_attrs_land_in_record():
+    ring = RingBufferSink()
+    t = Tracker([ring])
+    with t.span("stage", attrs={"flops": 10.0}) as sp:
+        sp.set_attrs(hbm_bytes=4.0)
+    rec, = ring.query(type="span")
+    assert rec["attrs"] == {"flops": 10.0, "hbm_bytes": 4.0}
+    assert rec["t0"] >= 0.0 and rec["dur_s"] >= 0.0
+    # spans without attrs carry no attrs key (record stays lean)
+    with t.span("bare"):
+        pass
+    assert "attrs" not in ring.query(type="span", name="bare")[0]
+
+
 # -- sinks --------------------------------------------------------------------
 
 
@@ -177,6 +282,66 @@ def test_jsonl_round_trip(tmp_path):
     assert recs[3]["fields"]["ids"] == [0, 1, 2]
     assert recs[4]["name"] == "s" and recs[4]["dur_s"] >= 0.0
     json.dumps(recs)                       # fully json-clean
+
+
+def test_jsonl_rotation_keeps_last_file_and_round_trips(tmp_path):
+    """Size-capped JsonlSink: the live file rotates to ``path + '.1'``
+    when it would exceed max_bytes (exactly one trailing file kept), no
+    record is lost across the last rotation, and both files round-trip
+    through read_jsonl."""
+    import os
+
+    path = str(tmp_path / "events.jsonl")
+    sink = JsonlSink(path, max_bytes=512)
+    t = Tracker([sink])
+    for i in range(200):
+        t.count("c", 1)
+    t.close()
+    assert sink.total == 200
+    assert sink.rotations >= 1
+    live = read_jsonl(path)
+    rolled = read_jsonl(path + ".1")
+    assert os.path.getsize(path) <= 512
+    assert os.path.getsize(path + ".1") <= 512
+    # the two files hold the newest records, contiguous and in order
+    tail = rolled + live
+    assert [r["total"] for r in tail] == \
+        list(range(200 - len(tail) + 1, 201))
+    with pytest.raises(ValueError):
+        JsonlSink(str(tmp_path / "x.jsonl"), max_bytes=0)
+
+
+def test_jsonl_uncapped_never_rotates(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    sink = JsonlSink(path)
+    t = Tracker([sink])
+    for _ in range(100):
+        t.count("c")
+    t.close()
+    assert sink.rotations == 0
+    assert len(read_jsonl(path)) == 100
+
+
+def test_format_table_surfaces_sink_drops_and_counts():
+    """Satellite: silent ring-buffer overflow must be visible in the
+    rollup — snapshot carries per-sink records/dropped and format_table
+    renders them alongside histogram sample counts."""
+    ring = RingBufferSink(capacity=4)
+    t = Tracker([ring])
+    for _ in range(10):
+        t.observe("lat", 0.01)
+    snap = t.snapshot()
+    assert snap["sinks"] == [
+        {"sink": "RingBufferSink", "records": 10, "dropped": 6}]
+    table = format_table(snap)
+    assert "sinks" in table and "dropped" in table
+    assert "RingBufferSink" in table
+    lines = [ln for ln in table.splitlines() if "RingBufferSink" in ln]
+    assert "10" in lines[0] and "6" in lines[0]
+    # histogram sample count (n=) still rendered
+    hist_lines = [ln for ln in table.splitlines() if ln.strip()
+                  .startswith("lat")]
+    assert "10" in hist_lines[0]
 
 
 def test_stdout_table_and_live_events(capsys):

@@ -1,0 +1,147 @@
+"""Perf-regression gate (benchmarks/regress.py, DESIGN.md §14): manifest
+extraction over the BENCH_*.json trajectory, shape-gated relative
+comparisons, absolute contract bounds, and the CLI."""
+
+import json
+
+import pytest
+
+from benchmarks.regress import (ROOT, check_bounds, compare, extract,
+                                load_manifest, main, run_gate,
+                                trailing_split)
+
+
+def _loadgen_bench(qps=100.0, p99=0.02, recall=0.96, meets=True):
+    """A synthetic loadgen BENCH dict at a fixed shape."""
+    return {
+        "bench": "loadgen", "n": 3000, "d": 24, "code_len": 16,
+        "num_ranges": 16, "batch_size": 8, "requests": 60,
+        "classes": {
+            "standard": {"recall_target": 0.95, "k": 10,
+                         "requests": 40, "qps": qps,
+                         "p50_s": p99 / 4.0, "p99_s": p99,
+                         "achieved_recall": recall},
+        },
+        "acceptance": {"meets": meets, "recall_contract_met": True,
+                       "trace_valid": True, "cost_attrs_present": True},
+    }
+
+
+def test_within_tolerance_passes():
+    base = extract(_loadgen_bench(qps=100.0), "a/BENCH_0001.json")
+    cur = extract(_loadgen_bench(qps=80.0), "b/BENCH_0001.json")
+    rows = compare(cur, base)                  # -20% < 60% tolerance
+    assert rows and all(r["status"] == "ok" for r in rows)
+    rows, ok = run_gate([cur], [base])
+    assert ok
+
+
+def test_injected_qps_regression_detected():
+    base = extract(_loadgen_bench(qps=100.0), "a/BENCH_0001.json")
+    cur = extract(_loadgen_bench(qps=30.0), "b/BENCH_0001.json")
+    rows = compare(cur, base)                  # -70% > 60% tolerance
+    bad = [r for r in rows if r["status"] == "regressed"]
+    assert [r["metric"] for r in bad] == ["loadgen.standard.qps"]
+    assert bad[0]["delta"] == pytest.approx(-0.7)
+    _, ok = run_gate([cur], [base])
+    assert not ok
+
+
+def test_latency_regression_is_direction_aware():
+    """Higher latency regresses; higher qps never does (signed 'worse')."""
+    base = extract(_loadgen_bench(qps=100.0, p99=0.02), "a/B_1.json")
+    cur = extract(_loadgen_bench(qps=500.0, p99=0.08), "b/B_1.json")
+    rows = compare(cur, base)                  # p99 4x > 150% tol band
+    by = {r["metric"]: r["status"] for r in rows}
+    assert by["loadgen.standard.p99_s"] == "regressed"
+    assert by["loadgen.standard.qps"] == "ok"
+
+
+def test_recall_has_a_tight_band():
+    base = extract(_loadgen_bench(recall=0.96), "a/B_1.json")
+    cur = extract(_loadgen_bench(recall=0.90), "b/B_1.json")
+    by = {r["metric"]: r["status"] for r in compare(cur, base)}
+    assert by["loadgen.standard.achieved_recall"] == "regressed"
+
+
+def test_shape_mismatch_skips_relative_comparison():
+    base = extract(_loadgen_bench(), "a/B_1.json")
+    smoke = _loadgen_bench(qps=1.0)            # 100x slower but...
+    smoke["n"] = 300                           # ...a different scale
+    cur = extract(smoke, "b/B_1.json")
+    rows = compare(cur, base)
+    assert len(rows) == 1 and rows[0]["status"] == "skipped"
+    _, ok = run_gate([cur], [base])            # bounds still checked
+    assert ok
+
+
+def test_bound_violation_fails_at_any_scale():
+    cur = extract(_loadgen_bench(meets=False), "b/B_1.json")
+    rows = check_bounds(cur)
+    assert {r["metric"]: r["status"] for r in rows}[
+        "loadgen.loadgen_meets"] == "violated"
+    _, ok = run_gate([cur], [])                # no baseline at all
+    assert not ok
+
+
+def test_same_file_is_not_compared_against_itself():
+    e = extract(_loadgen_bench(), "a/B_1.json")
+    rows, ok = run_gate([e], [e])              # identical paths
+    assert ok
+    assert all(r["status"] == "ok" for r in rows)
+    assert not any("vs" in r["metric"] for r in rows)   # bounds only
+
+
+def test_tol_scale_widens_the_band():
+    base = extract(_loadgen_bench(qps=100.0), "a/B_1.json")
+    cur = extract(_loadgen_bench(qps=30.0), "b/B_1.json")
+    _, ok = run_gate([cur], [base], tol_scale=2.0)      # 120% band
+    assert ok
+
+
+def test_unknown_bench_kind_is_ignored():
+    assert extract({"bench": "mystery", "x": 1}, "B_9.json") is None
+
+
+def test_repo_trajectory_extracts_and_passes(capsys):
+    """The gate's default mode must hold on the repo's own recorded
+    BENCH trajectory (the CI invariant this module exists to keep)."""
+    manifest = load_manifest(ROOT)
+    assert len(manifest) >= 6                  # one per recorded bench
+    assert {e["kind"] for e in manifest} >= {
+        "engine_compare", "streaming", "catalyst", "distributed",
+        "planner", "obs"}
+    for e in manifest:
+        assert e["metrics"], f"no metrics extracted from {e['file']}"
+    current, baseline = trailing_split(manifest)
+    assert len(current) == len({e["kind"] for e in manifest})
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    assert "PASS" in out
+
+
+def test_cli_smoke_dirs_and_manifest_roundtrip(tmp_path, capsys):
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
+    cur_dir.mkdir(), base_dir.mkdir()
+    (base_dir / "BENCH_0007.json").write_text(
+        json.dumps(_loadgen_bench(qps=100.0)))
+    (cur_dir / "BENCH_0007.json").write_text(
+        json.dumps(_loadgen_bench(qps=90.0)))
+    mpath = tmp_path / "manifest.json"
+    rc = main(["--current", str(cur_dir), "--baseline", str(base_dir),
+               "--manifest", str(mpath)])
+    assert rc == 0
+    entries = json.loads(mpath.read_text())["entries"]
+    assert len(entries) == 2
+    assert all(e["kind"] == "loadgen" for e in entries)
+
+    # injected regression through the same CLI path trips exit 1
+    (cur_dir / "BENCH_0007.json").write_text(
+        json.dumps(_loadgen_bench(qps=10.0)))
+    assert main(["--current", str(cur_dir),
+                 "--baseline", str(base_dir)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_empty_current_dir_fails(tmp_path):
+    assert main(["--current", str(tmp_path)]) == 1
