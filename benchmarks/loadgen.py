@@ -91,6 +91,7 @@ def measure_service(eng, queries, rng):
         for _ in range(WARMUP):
             qb = queries[rng.choice(queries.shape[0], QB, replace=False)]
             t0 = time.perf_counter()
+            # repro-lint: allow[R6] SLO harness times raw service, spanless
             jax.block_until_ready(eng.query(jax.numpy.asarray(qb), k,
                                             recall_target=target))
             times.append(time.perf_counter() - t0)

@@ -1,0 +1,19 @@
+"""repro-lint: static invariant rules + jaxpr/trace contract analyzer.
+
+Two engines (DESIGN.md §15):
+
+- :mod:`repro.analysis.rules` — dependency-free AST rules R1–R6 over
+  ``src/repro`` and ``benchmarks/``.
+- :mod:`repro.analysis.contracts` — trace/jaxpr contracts C1–C3 driven
+  through the public query entry points (imports jax; opt-in via
+  ``--contracts``).
+
+CLI: ``python -m repro.analysis.lint``.
+"""
+
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    load_baseline,
+    save_baseline,
+    split_by_baseline,
+)

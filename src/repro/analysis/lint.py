@@ -1,0 +1,97 @@
+"""repro-lint CLI: ``python -m repro.analysis.lint`` (DESIGN.md §15).
+
+Runs the AST invariant rules (R1–R6, repro/analysis/rules.py) over
+``src/repro`` and ``benchmarks/``, subtracts the committed baseline, and
+exits 1 on any *new* finding. ``--contracts`` additionally runs the
+jaxpr/trace contract analyzer (repro/analysis/contracts.py) — slower
+(imports jax, builds tiny indexes), which is why CI opts in explicitly
+and a quick local run stays sub-second.
+
+    python -m repro.analysis.lint                    # AST rules, repo
+    python -m repro.analysis.lint --contracts        # + trace contracts
+    python -m repro.analysis.lint --fix-baseline     # re-record baseline
+    python -m repro.analysis.lint path/to/tree ...   # custom roots
+
+The default baseline lives next to this module
+(``src/repro/analysis/baseline.json``) so it ships with the package.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis import findings as fnd
+from repro.analysis import rules
+
+PACKAGE_DIR = Path(__file__).resolve().parent
+REPO_ROOT = PACKAGE_DIR.parents[2]
+DEFAULT_BASELINE = PACKAGE_DIR / "baseline.json"
+DEFAULT_ROOTS = ("src/repro", "benchmarks")
+
+
+def run(argv: Optional[Sequence[str]] = None, *,
+        stdout=None) -> int:
+    """Entry point; returns the process exit code (0 clean, 1 findings,
+    2 usage/setup error)."""
+    out = stdout or sys.stdout
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX/Pallas invariant checker (rules R1-R6 + "
+                    "trace contracts C1-C3)")
+    ap.add_argument("roots", nargs="*",
+                    help=f"directories to lint (default: {DEFAULT_ROOTS} "
+                         f"under the repo root)")
+    ap.add_argument("--repo-root", default=None,
+                    help="path findings are reported relative to "
+                         "(default: auto-detected repo root)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--fix-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "and exit 0")
+    ap.add_argument("--contracts", action="store_true",
+                    help="also run the jaxpr/trace contract analyzer "
+                         "(needs jax; seconds, not milliseconds)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-finding hints")
+    args = ap.parse_args(argv)
+
+    repo_root = Path(args.repo_root) if args.repo_root else REPO_ROOT
+    roots = [Path(r) for r in args.roots] if args.roots else \
+        [repo_root / r for r in DEFAULT_ROOTS]
+    for r in roots:
+        if not r.exists():
+            print(f"error: lint root {r} does not exist", file=out)
+            return 2
+
+    found: List[fnd.Finding] = rules.lint_tree(roots, repo_root)
+    if args.contracts:
+        from repro.analysis import contracts
+        found.extend(contracts.run_contracts().findings)
+    found = sorted(set(found))
+
+    baseline_path = Path(args.baseline) if args.baseline \
+        else DEFAULT_BASELINE
+    if args.fix_baseline:
+        fnd.save_baseline(baseline_path, found)
+        print(f"baseline rewritten: {len(found)} finding(s) -> "
+              f"{baseline_path}", file=out)
+        return 0
+
+    baseline = fnd.load_baseline(baseline_path)
+    new, suppressed = fnd.split_by_baseline(found, baseline)
+    for f in new:
+        print(f.format() if not args.quiet
+              else f"{f.path}:{f.line}: {f.rule} {f.message}", file=out)
+    tail = (f"{len(new)} new finding(s), {len(suppressed)} baselined "
+            f"({baseline_path.name}: {len(baseline)} entr"
+            f"{'y' if len(baseline) == 1 else 'ies'})")
+    print(tail, file=out)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -1,0 +1,422 @@
+"""AST invariant rules over the library tree (DESIGN.md §15).
+
+Seven PRs of growth left a set of correctness invariants that existed
+only as prose; these rules make a machine check them on every commit:
+
+  R1  no bare ``assert`` in library code — ``python -O`` strips asserts,
+      so a safety check written as one silently disappears in optimized
+      deployments. Use ``raise ValueError`` / ``IndexError``.
+  R2  no tracker/span/host-callback usage lexically inside functions that
+      enter ``jax.jit`` / ``shard_map`` / ``pl.pallas_call`` — spans time
+      host work around device sync points; inside a traced function they
+      run at trace time only and would poison the parity contract
+      (DESIGN.md §13 "spans never enter jit").
+  R3  every kernel op registered in ``kernels/ops.py`` (a call to
+      ``_resolve(impl, "<op>")``) must reference a ref oracle that exists
+      in ``kernels/ref.py`` and make a ``_charge("<op>", ...)`` cost
+      call — the conformance + cost-attribution contract of PRs 1 and 7.
+  R4  dataclasses used as jit-static arguments (docstring tagged
+      ``jit-static``) must be ``frozen=True``, keep value equality, and
+      exclude runtime-only fields (``tracker``) from ``__eq__``/
+      ``__hash__`` via ``field(compare=False)`` — otherwise attaching
+      observability retraces every jitted collective (PR 6).
+  R5  no ``float64`` dtype literals or ``jax.config`` x64 toggles outside
+      ``compat.py`` — the repo is f32/i32 by contract; a stray x64 toggle
+      flips global jax state for every caller.
+  R6  no ``block_until_ready`` outside ``obs/trace.py``'s span sync —
+      scattered syncs serialize the async dispatch pipeline and make
+      span timings lie about where time goes.
+
+Suppression: a finding on line N is suppressed by a pragma comment on
+line N or N-1 of the form ``# repro-lint: allow[R6] <justification>``.
+The justification is mandatory — a bare pragma is itself reported (R0).
+Pre-existing findings are suppressed wholesale by the committed baseline
+(repro/analysis/findings.py); new code must be clean or justified.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.findings import Finding
+
+RULE_IDS = ("R1", "R2", "R3", "R4", "R5", "R6")
+
+# R2: symbols that must not appear lexically inside jit-entered functions.
+# Plain names (imports / constructors) and attribute accesses are matched
+# separately. ``.count`` is deliberately absent: trace-time dispatch
+# counting in kernels/ops.py is an intentional design (DESIGN.md §13).
+R2_FORBIDDEN_NAMES = frozenset({
+    "Tracker", "span_or_null", "resolve_tracker", "set_default_tracker",
+    "default_tracker", "io_callback", "host_callback", "pure_callback",
+})
+R2_FORBIDDEN_ATTRS = frozenset({
+    "span", "sync", "block_until_ready", "observe", "gauge", "event",
+    "io_callback", "host_callback", "pure_callback",
+})
+R2_ENTRY_NAMES = frozenset({"jit", "shard_map", "pallas_call"})
+
+# R4: fields carrying runtime-only state that must not enter eq/hash.
+R4_RUNTIME_FIELDS = frozenset({"tracker"})
+R4_RUNTIME_ANNOTATIONS = ("Tracker",)
+
+# R5/R6 allowed homes.
+R5_ALLOWED_BASENAMES = frozenset({"compat.py"})
+R6_ALLOWED_SUFFIX = "obs/trace.py"
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*allow\[([A-Za-z0-9,\s]+)\]\s*(.*)$")
+
+HINTS = {
+    "R1": "raise ValueError/IndexError instead — assert is stripped "
+          "under python -O, so the check vanishes in production",
+    "R2": "record metrics host-side after the device sync point; spans "
+          "and trackers must never enter traced code (DESIGN.md §13)",
+    "R3": "register the op fully: a _ref.<op>_ref oracle in "
+          "kernels/ref.py and a _charge(\"<op>\", ...) cost call "
+          "(DESIGN.md §14)",
+    "R4": "declare @dataclasses.dataclass(frozen=True) and exclude "
+          "runtime-only fields with dataclasses.field(compare=False)",
+    "R5": "route dtype widening through repro.compat (the only module "
+          "allowed to touch x64 state)",
+    "R6": "wrap the producing expression in a span sync "
+          "(sp.sync(x), repro/obs/trace.py) or justify with "
+          "# repro-lint: allow[R6] <reason>",
+}
+
+
+# -- helpers ------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_entry(node: ast.AST) -> bool:
+    """True when the expression anywhere names jit/shard_map/pallas_call
+    (covers ``@jax.jit``, ``@functools.partial(jax.jit, ...)``,
+    ``@compat.shard_map`` and bare-name spellings)."""
+    for sub in ast.walk(node):
+        d = _dotted(sub)
+        if d is not None and d.split(".")[-1] in R2_ENTRY_NAMES:
+            return True
+    return False
+
+
+def parse_pragmas(source: str, rel: str) -> tuple:
+    """(line -> allowed rule ids, R0 findings for unjustified pragmas)."""
+    allows: Dict[int, Set[str]] = {}
+    bad: List[Finding] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        if not m.group(2).strip():
+            bad.append(Finding(
+                "R0", rel, i,
+                "allow pragma without a justification",
+                "write # repro-lint: allow[Rn] <why this is safe>"))
+            continue
+        allows.setdefault(i, set()).update(rules)
+    return allows, bad
+
+
+def _suppressed(allows: Dict[int, Set[str]], rule: str, line: int) -> bool:
+    for ln in (line, line - 1):
+        if rule in allows.get(ln, ()):
+            return True
+    return False
+
+
+# -- per-file rules -----------------------------------------------------------
+
+
+def _r1_bare_assert(tree: ast.Module, rel: str) -> Iterable[Finding]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            cond = ast.unparse(node.test)
+            if len(cond) > 60:
+                cond = cond[:57] + "..."
+            yield Finding("R1", rel, node.lineno,
+                          f"bare assert in library code: `{cond}`",
+                          HINTS["R1"])
+
+
+def _jit_entered_functions(tree: ast.Module) -> Dict[str, ast.AST]:
+    """Functions that enter traced execution: decorated with (anything
+    mentioning) jit/shard_map/pallas_call, or passed to such a call —
+    including through one level of ``functools.partial`` / plain-name
+    aliasing (``body = functools.partial(f, ...); jax.jit(shard_map(body,
+    ...))`` marks ``f``, the PR 4 collective idiom)."""
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+
+    marked: Dict[str, ast.AST] = {}
+    # decorator form
+    for name, fn in defs.items():
+        for dec in fn.decorator_list:
+            if _mentions_entry(dec):
+                marked[name] = fn
+
+    # alias map: var -> function name (through partial / plain rebind)
+    alias: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        tgt = node.targets[0].id
+        val = node.value
+        if isinstance(val, ast.Name) and val.id in defs:
+            alias[tgt] = val.id
+        elif (isinstance(val, ast.Call)
+              and (_dotted(val.func) or "").split(".")[-1] == "partial"
+              and val.args and isinstance(val.args[0], ast.Name)
+              and val.args[0].id in defs):
+            alias[tgt] = val.args[0].id
+
+    # call form: jit(f) / shard_map(f, ...) / pallas_call(f, ...)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        if d is None or d.split(".")[-1] not in R2_ENTRY_NAMES:
+            continue
+        for arg in node.args[:1]:
+            if isinstance(arg, ast.Name):
+                target = alias.get(arg.id, arg.id)
+                if target in defs:
+                    marked[target] = defs[target]
+    return marked
+
+
+def _r2_tracker_in_jit(tree: ast.Module, rel: str) -> Iterable[Finding]:
+    for name, fn in _jit_entered_functions(tree).items():
+        for node in ast.walk(fn):
+            sym = None
+            if (isinstance(node, ast.Name)
+                    and node.id in R2_FORBIDDEN_NAMES):
+                sym = node.id
+            elif (isinstance(node, ast.Attribute)
+                  and node.attr in R2_FORBIDDEN_ATTRS):
+                sym = f".{node.attr}"
+            if sym is not None:
+                yield Finding(
+                    "R2", rel, node.lineno,
+                    f"`{sym}` inside jit-entered function `{name}`",
+                    HINTS["R2"])
+
+
+def _r4_jit_static_dataclasses(tree: ast.Module, rel: str
+                               ) -> Iterable[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        dec = next((d for d in node.decorator_list
+                    if (_dotted(d.func if isinstance(d, ast.Call) else d)
+                        or "").split(".")[-1] == "dataclass"), None)
+        if dec is None:
+            continue
+        doc = ast.get_docstring(node) or ""
+        if "jit-static" not in doc:
+            continue
+        kw = {k.arg: k.value for k in dec.keywords} \
+            if isinstance(dec, ast.Call) else {}
+        frozen = kw.get("frozen")
+        if not (isinstance(frozen, ast.Constant) and frozen.value is True):
+            yield Finding(
+                "R4", rel, node.lineno,
+                f"jit-static dataclass `{node.name}` is not frozen=True",
+                HINTS["R4"])
+        eq = kw.get("eq")
+        if isinstance(eq, ast.Constant) and eq.value is False:
+            yield Finding(
+                "R4", rel, node.lineno,
+                f"jit-static dataclass `{node.name}` sets eq=False "
+                f"(identity equality defeats the jit cache key)",
+                HINTS["R4"])
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            fname = stmt.target.id
+            ann = ast.unparse(stmt.annotation)
+            runtime = fname in R4_RUNTIME_FIELDS or any(
+                tag in ann for tag in R4_RUNTIME_ANNOTATIONS)
+            if not runtime:
+                continue
+            ok = False
+            if (isinstance(stmt.value, ast.Call)
+                    and (_dotted(stmt.value.func) or ""
+                         ).split(".")[-1] == "field"):
+                for k in stmt.value.keywords:
+                    if (k.arg == "compare"
+                            and isinstance(k.value, ast.Constant)
+                            and k.value.value is False):
+                        ok = True
+            if not ok:
+                yield Finding(
+                    "R4", rel, stmt.lineno,
+                    f"runtime-only field `{node.name}.{fname}` enters "
+                    f"__eq__/__hash__ (needs field(compare=False))",
+                    HINTS["R4"])
+
+
+def _r5_float64(tree: ast.Module, rel: str) -> Iterable[Finding]:
+    if Path(rel).name in R5_ALLOWED_BASENAMES:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            base = _dotted(node.value)
+            if base in ("jnp", "np", "numpy", "jax.numpy"):
+                yield Finding(
+                    "R5", rel, node.lineno,
+                    f"float64 dtype literal `{base}.float64`",
+                    HINTS["R5"])
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func) or ""
+            if d.endswith("config.update") and node.args:
+                arg0 = node.args[0]
+                if (isinstance(arg0, ast.Constant)
+                        and isinstance(arg0.value, str)
+                        and "x64" in arg0.value):
+                    yield Finding(
+                        "R5", rel, node.lineno,
+                        f"jax x64 toggle `{ast.unparse(node)[:60]}`",
+                        HINTS["R5"])
+
+
+def _r6_block_until_ready(tree: ast.Module, rel: str) -> Iterable[Finding]:
+    if rel.endswith(R6_ALLOWED_SUFFIX):
+        return
+    for node in ast.walk(tree):
+        name = None
+        if (isinstance(node, ast.Attribute)
+                and node.attr == "block_until_ready"):
+            name = _dotted(node) or ".block_until_ready"
+        elif isinstance(node, ast.Name) and node.id == "block_until_ready":
+            name = node.id
+        if name is not None:
+            yield Finding(
+                "R6", rel, node.lineno,
+                f"device sync `{name}` outside obs/trace.py",
+                HINTS["R6"])
+
+
+# -- cross-module rule: kernel registry (R3) ----------------------------------
+
+
+def check_kernel_registry(ops_path: Path, ref_path: Path,
+                          rel_ops: Optional[str] = None) -> List[Finding]:
+    """R3 over a kernels/ops.py + kernels/ref.py pair: every op name
+    registered through ``_resolve(impl, "<op>")`` must make a
+    ``_charge("<op>", ...)`` call and reference an oracle ``_ref.<fn>``
+    that exists in ref.py."""
+    rel_ops = rel_ops or str(ops_path)
+    ops_tree = ast.parse(Path(ops_path).read_text())
+    ref_tree = ast.parse(Path(ref_path).read_text())
+    ref_fns = {n.name for n in ast.walk(ref_tree)
+               if isinstance(n, ast.FunctionDef)}
+    out: List[Finding] = []
+    for fn in ast.walk(ops_tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        op = None
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and (_dotted(node.func) or "").split(".")[-1]
+                    == "_resolve" and len(node.args) >= 2
+                    and isinstance(node.args[1], ast.Constant)
+                    and isinstance(node.args[1].value, str)):
+                op = node.args[1].value
+        if op is None:
+            continue
+        charged = any(
+            isinstance(node, ast.Call)
+            and (_dotted(node.func) or "").split(".")[-1] == "_charge"
+            and node.args and isinstance(node.args[0], ast.Constant)
+            and node.args[0].value == op
+            for node in ast.walk(fn))
+        if not charged:
+            out.append(Finding(
+                "R3", rel_ops, fn.lineno,
+                f"kernel op `{op}` has no _charge(\"{op}\", ...) cost "
+                f"attribution call", HINTS["R3"]))
+        oracles = [node.attr for node in ast.walk(fn)
+                   if isinstance(node, ast.Attribute)
+                   and isinstance(node.value, ast.Name)
+                   and node.value.id == "_ref"]
+        if not oracles:
+            out.append(Finding(
+                "R3", rel_ops, fn.lineno,
+                f"kernel op `{op}` references no ref oracle (_ref.*)",
+                HINTS["R3"]))
+        else:
+            for o in oracles:
+                if o not in ref_fns:
+                    out.append(Finding(
+                        "R3", rel_ops, fn.lineno,
+                        f"kernel op `{op}` references _ref.{o} which "
+                        f"does not exist in kernels/ref.py", HINTS["R3"]))
+    return out
+
+
+# -- driver -------------------------------------------------------------------
+
+_FILE_RULES = (_r1_bare_assert, _r2_tracker_in_jit,
+               _r4_jit_static_dataclasses, _r5_float64,
+               _r6_block_until_ready)
+
+
+def lint_file(path: Path, repo_root: Path) -> List[Finding]:
+    """All per-file rule findings for one source file, pragma-filtered."""
+    path = Path(path)
+    rel = path.resolve().relative_to(Path(repo_root).resolve()).as_posix()
+    source = path.read_text()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("R0", rel, e.lineno or 1,
+                        f"syntax error: {e.msg}", "fix the file")]
+    allows, bad_pragmas = parse_pragmas(source, rel)
+    out = list(bad_pragmas)
+    for rule_fn in _FILE_RULES:
+        for f in rule_fn(tree, rel):
+            if not _suppressed(allows, f.rule, f.line):
+                out.append(f)
+    return out
+
+
+def lint_tree(roots: Sequence[Path], repo_root: Path) -> List[Finding]:
+    """Lint every ``*.py`` under ``roots`` (tests/ excluded), then run the
+    cross-module kernel-registry rule on any ``kernels/ops.py`` +
+    ``kernels/ref.py`` pair found under a root."""
+    repo_root = Path(repo_root).resolve()
+    findings: List[Finding] = []
+    for root in roots:
+        root = Path(root)
+        files = sorted(p for p in root.rglob("*.py")
+                       if "tests" not in p.parts
+                       and "__pycache__" not in p.parts)
+        for p in files:
+            findings.extend(lint_file(p, repo_root))
+        for ops_path in sorted(root.rglob("kernels/ops.py")):
+            ref_path = ops_path.with_name("ref.py")
+            if ref_path.exists():
+                rel = ops_path.resolve().relative_to(repo_root).as_posix()
+                findings.extend(
+                    check_kernel_registry(ops_path, ref_path, rel))
+    return sorted(set(findings))

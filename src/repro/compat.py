@@ -22,6 +22,14 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
                check_rep=check_vma)
 
 
+def widest_float():
+    """The widest float dtype the runtime allows: f64 under x64 mode,
+    f32 otherwise. The only sanctioned way to consult x64 state —
+    repro-lint rule R5 confines float64/x64 references to this module."""
+    import jax.numpy as jnp
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
 def cost_analysis(compiled) -> dict:
     """``Compiled.cost_analysis()`` as a flat dict — older jax wraps the
     per-device dict in a one-element list."""

@@ -21,6 +21,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # norms & transforms
 # ---------------------------------------------------------------------------
@@ -154,8 +156,7 @@ def l2_collision_prob(d: jax.Array, r: float) -> jax.Array:
 
     ``F_r(d) = 1 - 2 Phi(-r/d) - (2d / (sqrt(2 pi) r)) (1 - exp(-(r/d)^2/2))``.
     """
-    d = jnp.maximum(jnp.asarray(d, jnp.float64 if jax.config.jax_enable_x64
-                                else jnp.float32), 1e-12)
+    d = jnp.maximum(jnp.asarray(d, compat.widest_float()), 1e-12)
     rd = r / d
     return (1.0 - 2.0 * _std_normal_cdf(-rd)
             - (2.0 * d) / (jnp.sqrt(2.0 * jnp.pi) * r)

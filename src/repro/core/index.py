@@ -84,6 +84,11 @@ class IndexSpec:
                  equality/hash — attaching observability never changes
                  what the spec *is* (jit-static identity included) or what
                  queries return (parity-tested).
+
+    The "jit-static" tag in this docstring is load-bearing: repro-lint
+    rule R4 (DESIGN.md §15) mechanically enforces frozen=True, value
+    equality, and ``field(compare=False)`` on runtime-only fields for
+    every dataclass carrying it.
     """
 
     family: str = "simple"

@@ -59,7 +59,9 @@ def percentile_partition(norms: jax.Array, m: int) -> Partition:
         jnp.arange(n, dtype=jnp.int32))
     # floor(rank * m / n) in [0, m) — equal-size slabs up to remainder.
     # int32 is safe while n * m < 2^31 (2M items x 256 ranges = 5.4e8).
-    assert n * m < 2 ** 31, "partition arithmetic would overflow int32"
+    if n * m >= 2 ** 31:
+        raise ValueError(f"partition arithmetic would overflow int32: "
+                         f"n={n} items x m={m} ranges >= 2^31")
     range_id = jnp.minimum((ranks * m) // n, m - 1)
     return _range_stats(norms, range_id.astype(jnp.int32), m)
 

@@ -55,7 +55,11 @@ def bucket_match_pallas(q_codes: jax.Array, bucket_codes: jax.Array, *,
     """
     Q, W = q_codes.shape
     B, W2 = bucket_codes.shape
-    assert W == W2 and Q % bq == 0 and B % bb == 0
+    if W != W2 or Q % bq or B % bb:
+        raise ValueError(
+            f"bucket_match_pallas precondition: codes (Q={Q}, W={W}) vs "
+            f"directory (B={B}, W={W2}) must share W with Q % {bq} == 0 "
+            f"and B % {bb} == 0 (pad in kernels/ops.py)")
     grid = (Q // bq, B // bb)
     return pl.pallas_call(
         functools.partial(_match_kernel, hash_bits=hash_bits),
@@ -109,7 +113,11 @@ def bucket_gather_pallas(cum: jax.Array, starts: jax.Array,
     """
     Q, S1 = cum.shape
     S = S1 - 1
-    assert starts.shape == (Q, S) and Q % bq == 0
+    if starts.shape != (Q, S) or Q % bq:
+        raise ValueError(
+            f"bucket_gather_pallas precondition: starts {starts.shape} "
+            f"must be (Q={Q}, S={S}) with Q % {bq} == 0 (pad in "
+            f"kernels/ops.py)")
     grid = (Q // bq,)
     return pl.pallas_call(
         functools.partial(_gather_kernel, num_sel=S),

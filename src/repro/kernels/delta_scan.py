@@ -51,8 +51,14 @@ def delta_scan_pallas(q_codes: jax.Array, delta_codes: jax.Array,
     """
     Q, W = q_codes.shape
     C, W2 = delta_codes.shape
-    assert W == W2 and Q % bq == 0 and C % bc == 0
-    assert live.shape == (1, C)
+    if W != W2 or Q % bq or C % bc:
+        raise ValueError(
+            f"delta_scan_pallas precondition: q_codes (Q={Q}, W={W}) vs "
+            f"delta (C={C}, W={W2}) must share W with Q % {bq} == 0 and "
+            f"C % {bc} == 0 (pad in kernels/ops.py)")
+    if live.shape != (1, C):
+        raise ValueError(f"delta_scan_pallas precondition: live "
+                         f"{live.shape} must be (1, C={C})")
     grid = (Q // bq, C // bc)
     return pl.pallas_call(
         functools.partial(_delta_scan_kernel, hash_bits=hash_bits),

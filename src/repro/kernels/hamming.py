@@ -43,7 +43,11 @@ def hamming_pallas(q_codes: jax.Array, db_codes: jax.Array, *,
     """
     Q, W = q_codes.shape
     N, W2 = db_codes.shape
-    assert W == W2 and Q % bq == 0 and N % bn == 0
+    if W != W2 or Q % bq or N % bn:
+        raise ValueError(
+            f"hamming_pallas precondition: q_codes (Q={Q}, W={W}) vs db "
+            f"(N={N}, W={W2}) must share W with Q % {bq} == 0 and "
+            f"N % {bn} == 0 (pad in kernels/ops.py)")
     grid = (Q // bq, N // bn)
     return pl.pallas_call(
         _hamming_kernel,

@@ -77,7 +77,11 @@ def hash_encode_pallas(x: jax.Array, A: jax.Array, tail: jax.Array,
     """
     N, d = x.shape
     L = A.shape[1]
-    assert N % bn == 0 and L % bl == 0 and d % bd == 0 and bl % WORD == 0
+    if N % bn or L % bl or d % bd or bl % WORD:
+        raise ValueError(
+            f"hash_encode_pallas precondition: N={N} % {bn}, L={L} % "
+            f"{bl}, d={d} % {bd} and bl={bl} % {WORD} must all be 0 "
+            f"(pad in kernels/ops.py)")
     n_k = d // bd
     grid = (N // bn, L // bl, n_k)
 

@@ -75,7 +75,11 @@ def mips_topk_pallas(queries: jax.Array, items: jax.Array, k: int, *,
     """
     Q, d = queries.shape
     N, d2 = items.shape
-    assert d == d2 and Q % bq == 0 and N % bn == 0 and k <= bn
+    if d != d2 or Q % bq or N % bn or k > bn:
+        raise ValueError(
+            f"mips_topk_pallas precondition: queries (Q={Q}, d={d}) vs "
+            f"items (N={N}, d={d2}) must share d with Q % {bq} == 0, "
+            f"N % {bn} == 0 and k={k} <= {bn} (pad in kernels/ops.py)")
     n_blocks = N // bn
     grid = (Q // bq, n_blocks)          # item axis minor => sequential sweep
     vals, ids = pl.pallas_call(

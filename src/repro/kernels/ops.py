@@ -135,6 +135,9 @@ def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
               impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Exact top-k inner products: vals (Q, k) f32, ids (Q, k) int32."""
     impl = _resolve(impl, "mips_topk")
+    if k > items.shape[0]:
+        raise ValueError(f"k={k} must not exceed the item count "
+                         f"N={items.shape[0]}")
     _charge("mips_topk", lambda q, n, d, kk: {
         m: _cost.re_rank_cost(q, n, d)[m] + _cost.top_k_cost(q, n, kk)[m]
         for m in ("flops", "hbm_bytes")},
@@ -143,7 +146,6 @@ def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
         return _ref.mips_topk_ref(queries, items, k)
     bq, bn = 8, 256
     Q, N = queries.shape[0], items.shape[0]
-    assert k <= N, "k must not exceed the item count"
     # Padded item rows must rank strictly last even against negative scores:
     # append a sentinel feature column — 1.0 on queries, 0.0 on real items,
     # -1e30 on padded items — so padded scores are real_dot - 1e30.

@@ -445,7 +445,8 @@ def main():
         for mk in meshes:
             ok &= run_mips_cell(mk, args.out).get("ok", False)
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all required"
+        if not (args.arch and args.shape):
+            raise SystemExit("--arch/--shape or --all required")
         for mk in meshes:
             ok &= run_cell(args.arch, args.shape, mk, args.out).get(
                 "ok", False)

@@ -47,7 +47,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_local_mesh(model_parallel: int = 1) -> Mesh:
     """All locally-visible devices as (data, model) — tests/examples."""
     n = jax.device_count()
-    assert n % model_parallel == 0
+    if n % model_parallel:
+        raise ValueError(f"{n} local devices not divisible by "
+                         f"model_parallel={model_parallel}")
     return _mk((n // model_parallel, model_parallel), ("data", "model"))
 
 

@@ -127,7 +127,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
-    assert H % KV == 0, f"n_heads={H} must be a multiple of n_kv={KV}"
+    if H % KV:
+        raise ValueError(f"n_heads={H} must be a multiple of n_kv={KV}")
     G = H // KV
     scale = scale if scale is not None else hd ** -0.5
     q_chunk = _pick_chunk(Sq, q_chunk)

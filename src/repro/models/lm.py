@@ -62,7 +62,9 @@ def combined_period(cfg: ModelConfig) -> int:
         p = _lcm(p, cfg.moe.every)
     if cfg.local_global_alternate:
         p = _lcm(p, 2)
-    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    if cfg.n_layers % p:
+        raise ValueError(f"n_layers={cfg.n_layers} must be a multiple of "
+                         f"the combined layer period {p}")
     return p
 
 

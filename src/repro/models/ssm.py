@@ -70,7 +70,9 @@ def _ssm_scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array,
     """
     B, S, D, N = a.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0
+    if S % chunk:
+        raise ValueError(f"sequence length S={S} must be a multiple of "
+                         f"chunk={chunk}")
     nc = S // chunk
     ac = a.reshape(B, nc, chunk, D, N).transpose(1, 0, 2, 3, 4)
     bc = b.reshape(B, nc, chunk, D, N).transpose(1, 0, 2, 3, 4)

@@ -68,6 +68,9 @@ class Span:
         try:
             if not failed and self._sync is not None:
                 import jax
+                # the one sanctioned device sync: repro-lint rule R6
+                # confines block_until_ready to this module, and rule R2 /
+                # contract C3 keep spans out of traced code entirely
                 jax.block_until_ready(self._sync)
         except BaseException:
             # a sync that raises mid-block_until_ready is a failed span:

@@ -98,7 +98,10 @@ class DeltaBuffer:
         """Append a batch; returns the assigned slots. Caller guarantees
         capacity (compact first) and supplies the current directory keys."""
         k = int(norms.shape[0])
-        assert k <= self.free, "delta buffer overflow (compact first)"
+        if k > self.free:
+            raise ValueError(
+                f"delta buffer overflow: appending {k} rows with only "
+                f"{self.free}/{self.capacity} slots free (compact first)")
         slots = np.arange(self.count, self.count + k, dtype=np.int32)
         self._norms[slots] = norms
         self._codes[slots] = codes
@@ -114,7 +117,12 @@ class DeltaBuffer:
     def tombstone(self, slot: int, sync: bool = True) -> None:
         """Mark a slot dead; pass ``sync=False`` inside a batch and call
         :meth:`_sync` once after it (the sync re-uploads every array)."""
-        assert 0 <= slot < self.count and self._live[slot]
+        if not 0 <= slot < self.count:
+            raise IndexError(
+                f"delta slot {slot} outside the occupied range "
+                f"[0, {self.count})")
+        if not self._live[slot]:
+            raise ValueError(f"delta slot {slot} is already tombstoned")
         self._live[slot] = False
         if sync:
             self._sync()

@@ -1,0 +1,118 @@
+"""Trace/jaxpr contract analyzer (repro-lint engine 2, DESIGN.md §15):
+trace-count budget regression, injected retrace hazard, dtype + span
+contracts on the live repo."""
+
+import jax
+import pytest
+
+from repro.analysis import contracts
+from repro.analysis.contracts import ContractReport, SpanPurityGuard
+from repro.core import distributed
+from repro.obs import Tracker
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return contracts._tiny_setup()
+
+
+def test_trace_budget_two_classes_exactly_two_traces(tiny):
+    """The PR 4/5 cache contract, pinned: 2 (num_probe, k) classes,
+    each queried twice -> exactly 2 collective traces, 2 cache hits."""
+    cidx, items, queries = tiny
+    report = ContractReport()
+    contracts.check_distributed(report, cidx.spec, items, queries,
+                                classes=((60, 5), (90, 5)),
+                                planned_budget=None)
+    assert report.findings == []
+    assert report.stats["distributed_classes"] == 2
+    assert report.stats["distributed_traces"] == 2
+    assert report.stats["distributed_cache_hits"] == 2
+    assert report.stats["distributed_trace_gauge"] == 2
+
+
+def test_trace_budget_planned_class_adds_one_trace(tiny):
+    cidx, items, queries = tiny
+    report = ContractReport()
+    contracts.check_distributed(report, cidx.spec, items, queries,
+                                classes=((60, 5),), planned_budget=20)
+    assert report.findings == []
+    assert report.stats["distributed_traces"] == 2   # 1 scalar + 1 planned
+    assert report.stats["distributed_cache_hits"] == 2
+
+
+def test_analyzer_flags_injected_unhashable_static_arg(tiny, monkeypatch):
+    """Inject the canonical retrace hazard — an unhashable value in the
+    jit-static cache key — and assert the analyzer reports C1 instead of
+    crashing."""
+    cidx, items, queries = tiny
+    orig = distributed.DistributedEngine._mapped
+
+    def bad_mapped(self, num_probe, k, budgets=None):
+        # a list-valued static leaks into the key: dict lookup raises
+        # TypeError exactly like jit would on an unhashable static arg
+        return orig(self, num_probe, k,
+                    list(budgets) if budgets is not None else [num_probe])
+
+    monkeypatch.setattr(distributed.DistributedEngine, "_mapped",
+                        bad_mapped)
+    report = ContractReport()
+    contracts.check_distributed(report, cidx.spec, items, queries,
+                                classes=((60, 5),), planned_budget=None)
+    assert [f.rule for f in report.findings].count("C1") >= 1
+    f = next(f for f in report.findings if f.rule == "C1")
+    assert "unhashable" in f.message
+    assert f.path.endswith("core/distributed.py")
+    assert f.line > 1
+
+
+def test_trace_count_excess_is_a_finding(tiny, monkeypatch):
+    """A collective that re-traces on repeat traffic (cache defeated)
+    must violate the declared budget."""
+    cidx, items, queries = tiny
+    orig = distributed.DistributedEngine._mapped
+
+    def never_cached(self, num_probe, k, budgets=None):
+        fn = orig(self, num_probe, k, budgets)
+        self._mapped_cache.clear()    # defeat the cache: next call misses
+        return fn
+
+    monkeypatch.setattr(distributed.DistributedEngine, "_mapped",
+                        never_cached)
+    report = ContractReport()
+    contracts.check_distributed(report, cidx.spec, items, queries,
+                                classes=((60, 5),), planned_budget=None)
+    assert any(f.rule == "C1" and "budget" in f.message
+               for f in report.findings)
+
+
+def test_span_purity_guard_catches_span_in_jit():
+    with SpanPurityGuard() as guard:
+        tr = Tracker()
+
+        @jax.jit
+        def bad(x):
+            with tr.span("inside.jit"):
+                return x + 1
+
+        bad(jax.numpy.ones(3))
+    assert guard.violations == ["inside.jit"]
+
+
+def test_span_purity_guard_allows_host_side_spans():
+    with SpanPurityGuard() as guard:
+        tr = Tracker()
+        with tr.span("host.side"):
+            jax.jit(lambda x: x + 1)(jax.numpy.ones(3))
+    assert guard.violations == []
+
+
+def test_run_contracts_clean_on_repo():
+    """Full analyzer run over the live entry points: no findings, and the
+    measured trace accounting matches the declared budget."""
+    report = contracts.run_contracts()
+    assert [f.format() for f in report.findings] == []
+    assert report.stats["distributed_traces"] == (
+        report.stats["distributed_classes"]
+        + report.stats["distributed_planned_classes"])
+    assert report.stats["span_violations"] == []

@@ -58,3 +58,13 @@ def test_auto_impl_uses_ref_on_cpu():
     A = jnp.ones((8, 16))
     out = ops.hash_encode(x, A)
     assert out.shape == (4, 1)
+
+
+def test_mips_topk_k_exceeding_n_raises():
+    # typed guard (repro-lint R1): must hold on both dispatch arms and
+    # survive python -O
+    queries = jnp.ones((2, 4))
+    items = jnp.ones((3, 4))
+    for impl in ("ref", "pallas"):
+        with pytest.raises(ValueError, match="must not exceed the item"):
+            ops.mips_topk(queries, items, 5, impl=impl)

@@ -395,3 +395,39 @@ def test_calibration_roundtrip_and_drift_invalidation(ds, pool, tmp_path):
                           capacity=32)
     streaming.save_index(mgr, 3, old)
     assert streaming.load_index(str(tmp_path), step=3).calib is None
+
+
+# -- typed guard exceptions (repro-lint R1: checks must survive -O) -----------
+
+
+def _tiny_delta():
+    from repro.streaming.delta import DeltaBuffer
+    buf = DeltaBuffer(capacity=4, dim=2, words=1)
+    buf.append(jnp.ones((2, 2)), np.ones((2,), np.float32),
+               np.zeros((2, 1), np.uint32), np.zeros((2,), np.int32),
+               np.arange(2, dtype=np.int32), [])
+    return buf
+
+
+def test_delta_overflow_raises_value_error():
+    buf = _tiny_delta()
+    with pytest.raises(ValueError, match="delta buffer overflow"):
+        buf.append(jnp.ones((3, 2)), np.ones((3,), np.float32),
+                   np.zeros((3, 1), np.uint32), np.zeros((3,), np.int32),
+                   np.arange(3, dtype=np.int32), [])
+    assert buf.count == 2, "failed append must not mutate the buffer"
+
+
+def test_delta_tombstone_out_of_range_raises_index_error():
+    buf = _tiny_delta()
+    for slot in (-1, 2, 7):
+        with pytest.raises(IndexError, match="outside the occupied"):
+            buf.tombstone(slot)
+
+
+def test_delta_double_tombstone_raises_value_error():
+    buf = _tiny_delta()
+    buf.tombstone(1)
+    with pytest.raises(ValueError, match="already tombstoned"):
+        buf.tombstone(1)
+    assert buf.live_count == 1
