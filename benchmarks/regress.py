@@ -190,6 +190,34 @@ def _extract_loadgen(b: dict) -> tuple:
     return shape, metrics, bounds
 
 
+def _extract_kernelcheck(b: dict) -> tuple:
+    """Static analyzer report (repro/analysis/kernelcheck.py): per-kernel
+    modelled VMEM fractions and analytic flop/byte bills. All numbers are
+    deterministic functions of the code, so tolerances are tight — a
+    jump means a kernel's tiling or cost model actually changed."""
+    shape = {op: [c["shapes"] for c in v.get("classes", [])]
+             for op, v in b.get("kernels", {}).items()}
+    metrics: Dict[str, dict] = {}
+    worst_frac = 0.0
+    for op, v in sorted(b.get("kernels", {}).items()):
+        for i, c in enumerate(v.get("classes", [])):
+            worst_frac = max(worst_frac, c["vmem_frac"])
+            metrics[f"{op}.c{i}.vmem_frac"] = _m(c["vmem_frac"], "lower",
+                                                 0.25)
+            metrics[f"{op}.c{i}.flops"] = _m(c["declared"]["flops"],
+                                             "lower", 0.5)
+            metrics[f"{op}.c{i}.hbm_bytes"] = _m(
+                c["declared"]["hbm_bytes"], "lower", 0.5)
+    bounds = [
+        _bound("kernelcheck_clean", b.get("clean") == 1,
+               "K1-K5 must hold on every registered kernel "
+               f"({len(b.get('findings', []))} finding(s))"),
+        _bound("vmem_within_budget", worst_frac <= 1.0,
+               "no kernel's modelled VMEM may exceed the budget"),
+    ]
+    return shape, metrics, bounds
+
+
 EXTRACTORS = {
     "engine_compare": _extract_engine_compare,
     "streaming": _extract_streaming,
@@ -198,6 +226,7 @@ EXTRACTORS = {
     "planner": _extract_planner,
     "obs": _extract_obs,
     "loadgen": _extract_loadgen,
+    "kernelcheck": _extract_kernelcheck,
 }
 
 

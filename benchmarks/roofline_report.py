@@ -11,10 +11,19 @@ Usage:
       Predicted-vs-measured table for the query hot path: the analytic
       per-stage cost model (work-shares derived from the bench's
       ``query_shape``) against the *measured* span timings the obs layer
-      recorded (DESIGN.md §13). Columns: measured p50/p99, measured share
-      of the end-to-end query span, predicted share, and the ratio — a
-      stage whose measured share runs far above its predicted share is
-      the one off its roofline.
+      recorded (DESIGN.md §13). Columns: measured p50/p99, predicted
+      flops/bytes, the backing kernel's statically modelled VMEM
+      (kernelcheck, DESIGN.md §16), measured share of the end-to-end
+      query span, predicted share, and the ratio — a stage whose measured
+      share runs far above its predicted share is the one off its
+      roofline.
+
+The default (dryrun) run also renders the per-kernel kernelcheck table:
+modelled VMEM per shape class against the budget, plus the analytic
+flop/byte bills and their jaxpr cross-check ratios — the static columns
+the fused-kernel work is budgeted against. Source: the newest
+kernelcheck BENCH_*.json in the repo root (or ``--kernelcheck PATH``),
+falling back to a live ``repro.analysis.kernelcheck`` run.
 """
 
 import argparse
@@ -30,6 +39,16 @@ OBS_STAGES = ("repro.engine.hash_encode", "repro.engine.directory_match",
               "repro.engine.segmented_gather", "repro.engine.re_rank",
               "repro.engine.top_k")
 OBS_TOTAL = "repro.engine.query"
+
+# hot-path stage -> backing Pallas kernel (kernelcheck registry op name);
+# re_rank and top_k both resolve to the fused exact-MIPS kernel
+STAGE_KERNEL = {
+    "repro.engine.hash_encode": "hash_encode",
+    "repro.engine.directory_match": "bucket_match",
+    "repro.engine.segmented_gather": "bucket_gather",
+    "repro.engine.re_rank": "mips_topk",
+    "repro.engine.top_k": "mips_topk",
+}
 
 
 def load(mesh: str, dryrun_dir: str = DRYRUN_DIR):
@@ -59,7 +78,57 @@ def predicted_stage_work(shape: dict) -> dict:
     return {s: c["flops"] for s, c in query_stage_costs(shape).items()}
 
 
-def obs_table(bench_path: str) -> None:
+def load_kernelcheck(path: str = None) -> dict:
+    """The kernelcheck report to render: an explicit path, else the
+    newest kernelcheck-kind BENCH_*.json in the repo root, else a live
+    (probe-free) analyzer run."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    candidates = [path] if path else \
+        sorted(glob.glob(os.path.join(root, "BENCH_*.json")), reverse=True)
+    for f in candidates:
+        try:
+            r = json.load(open(f))
+        except (OSError, json.JSONDecodeError):
+            continue
+        if r.get("bench") == "kernelcheck":
+            return r
+    from repro.analysis.kernelcheck import run_kernelcheck
+
+    return run_kernelcheck(probes=False)[1]
+
+
+def _stage_vmem(kc: dict) -> dict:
+    """stage -> worst-class modelled VMEM bytes of its backing kernel."""
+    out = {}
+    for stage, op in STAGE_KERNEL.items():
+        classes = kc.get("kernels", {}).get(op, {}).get("classes", [])
+        if classes:
+            out[stage] = max(c["vmem_bytes"] for c in classes)
+    return out
+
+
+def kernelcheck_table(kc: dict) -> None:
+    budget = kc.get("vmem_budget_bytes", 1)
+    print(f"kernelcheck: platform={kc.get('platform')} "
+          f"budget={budget / 2**20:.0f}MiB "
+          f"{'clean' if kc.get('clean') else 'FINDINGS'}")
+    print("| kernel | shape class | grid | vmem | vmem frac "
+          "| model flops | model bytes | jaxpr flops x | jaxpr bytes x |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for op in sorted(kc.get("kernels", {})):
+        for c in kc["kernels"][op]["classes"]:
+            shapes = " ".join(f"{k}={v}" for k, v in
+                              sorted(c["shapes"].items()))
+            print(f"| {op} | {shapes} | {tuple(c['grid'])} "
+                  f"| {c['vmem_bytes'] / 2**20:.2f}MiB "
+                  f"| {c['vmem_frac']:.3f} "
+                  f"| {c['declared']['flops']:.3g} "
+                  f"| {c['declared']['hbm_bytes']:.3g} "
+                  f"| {c['ratio']['flops']:.2f} "
+                  f"| {c['ratio']['hbm_bytes']:.2f} |")
+
+
+def obs_table(bench_path: str, kernelcheck_path: str = None) -> None:
     r = json.load(open(bench_path))
     spans = r.get("spans", {})
     shape = r.get("query_shape")
@@ -72,12 +141,17 @@ def obs_table(bench_path: str) -> None:
     total_work = sum(c["flops"] for c in costs.values())
     meas = {s: spans[s]["p50"] for s in OBS_STAGES if s in spans}
     total_meas = sum(meas.values())
+    try:
+        vmem = _stage_vmem(load_kernelcheck(kernelcheck_path))
+    except Exception as e:                     # report optional, never fatal
+        print(f"(kernelcheck columns unavailable: {e})")
+        vmem = {}
     print(f"query shape: q={shape['q']} n={shape['n']} d={shape['d']} "
           f"code_len={shape['code_len']} buckets={shape['num_buckets']} "
           f"probe_width={shape['probe_width']:.0f}")
     print("| stage | measured p50 | p99 | pred flops | pred bytes "
-          "| measured share | predicted share | meas/pred |")
-    print("|---|---|---|---|---|---|---|---|")
+          "| kernel vmem | measured share | predicted share | meas/pred |")
+    print("|---|---|---|---|---|---|---|---|---|")
     for s in OBS_STAGES:
         if s not in spans:
             continue
@@ -85,16 +159,18 @@ def obs_table(bench_path: str) -> None:
         p_share = costs[s]["flops"] / total_work
         ratio = m_share / p_share if p_share else float("inf")
         short = s.split(".")[-1]
+        vm = f"{vmem[s] / 2**20:.2f}MiB" if s in vmem else "-"
         print(f"| {short} | {fmt_s(spans[s]['p50'])} "
               f"| {fmt_s(spans[s]['p99'])} "
               f"| {costs[s]['flops']:.3g} | {costs[s]['hbm_bytes']:.3g} "
+              f"| {vm} "
               f"| {m_share:.3f} | {p_share:.3f} | {ratio:.2f} |")
     if OBS_TOTAL in spans:
         covered = total_meas / spans[OBS_TOTAL]["p50"] \
             if spans[OBS_TOTAL]["p50"] else 0.0
         print(f"| query (end-to-end) | {fmt_s(spans[OBS_TOTAL]['p50'])} "
-              f"| {fmt_s(spans[OBS_TOTAL]['p99'])} | - | - | 1.000 | - "
-              f"| stage coverage {covered:.2f} |")
+              f"| {fmt_s(spans[OBS_TOTAL]['p99'])} | - | - | - | 1.000 "
+              f"| - | stage coverage {covered:.2f} |")
 
 
 def dryrun_table(mesh: str, dryrun_dir: str) -> None:
@@ -123,11 +199,20 @@ def main():
                     help="obs_report BENCH json: print predicted-vs-"
                          "measured per-stage table instead of the dryrun "
                          "table")
+    ap.add_argument("--kernelcheck", default=None, metavar="BENCH_JSON",
+                    help="kernelcheck report to render (default: newest "
+                         "kernelcheck BENCH_*.json in the repo root, "
+                         "falling back to a live analyzer run)")
     args = ap.parse_args()
     if args.obs:
-        obs_table(args.obs)
+        obs_table(args.obs, args.kernelcheck)
     else:
         dryrun_table(args.mesh, args.dir)
+        print()
+        try:
+            kernelcheck_table(load_kernelcheck(args.kernelcheck))
+        except Exception as e:                 # static table never fatal
+            print(f"(kernelcheck table unavailable: {e})")
 
 
 if __name__ == "__main__":

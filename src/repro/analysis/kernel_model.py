@@ -1,0 +1,373 @@
+"""Abstract kernel models for the Pallas static analyzer (DESIGN.md §16).
+
+Every op in ``repro.kernels.ops.KERNEL_REGISTRY`` wraps exactly one
+``pallas_call``. This module turns that call into an *analyzable model*
+without running (or even lowering) the kernel:
+
+  * :class:`PallasCapture` monkeypatches
+    ``jax.experimental.pallas.pallas_call`` with a recorder that snapshots
+    the call's grid, BlockSpecs (block shape + index_map callable),
+    out_shape and VMEM scratch shapes, then returns abstract zeros so the
+    surrounding wrapper keeps tracing. The jitted ``*_pallas`` builder is
+    unwrapped past ``jax.jit`` for the duration (a cached executable would
+    skip ``pallas_call`` entirely and capture nothing).
+  * :func:`capture_kernel` drives one registry entry through
+    ``jax.eval_shape`` over a representative shape class and returns the
+    :class:`KernelModel` the K1–K3 checks consume.
+  * :func:`jaxpr_device_cost` derives an independent {flops, hbm_bytes}
+    estimate from a function's jaxpr (the K5 cross-check arm against the
+    analytic ``repro.obs.cost`` models billed by ``ops._charge``).
+  * :func:`grid_points` enumerates the grid for interval analysis — the
+    full cartesian grid when small, corner points when huge (index maps in
+    this codebase are affine, so extremes occur at corners).
+
+Nothing here is jit-static: models are plain-Python analysis artifacts,
+built at lint time, never entering a trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import inspect
+import itertools
+import math
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+# grids larger than this are sampled at corners instead of enumerated
+FULL_ENUM_CAP = 4096
+
+
+def source_loc(obj: Any) -> Tuple[str, int]:
+    """Best-effort repo-relative ``(path, line)`` of a callable (pragma
+    anchoring + finding locations). Falls back to ("<unknown>", 1)."""
+    try:
+        obj = inspect.unwrap(obj)
+        if isinstance(obj, functools.partial):
+            obj = obj.func
+        path = Path(inspect.getsourcefile(obj) or "")
+        line = inspect.getsourcelines(obj)[1]
+        try:
+            return str(path.resolve().relative_to(REPO_ROOT)), line
+        except ValueError:
+            return str(path), line
+    except (TypeError, OSError):
+        return "<unknown>", 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockModel:
+    """One operand/result/scratch block of a captured ``pallas_call``."""
+
+    role: str                              # "in" | "out" | "scratch"
+    index: int                             # position within its role
+    block_shape: Tuple[int, ...]
+    dtype: str
+    operand_shape: Tuple[int, ...]         # padded full shape; () = scratch
+    index_map: Optional[Callable] = None   # grid idx -> block idx; None for
+                                           # scratch (grid-invariant)
+
+    @property
+    def itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    def block_bytes(self) -> int:
+        return int(math.prod(self.block_shape)) * self.itemsize
+
+    def block_index(self, grid_point: Sequence[int]) -> Tuple[int, ...]:
+        """Evaluate the index map at one concrete grid point."""
+        if self.index_map is None:
+            return tuple(0 for _ in self.block_shape)
+        out = self.index_map(*grid_point)
+        if not isinstance(out, tuple):
+            out = (out,)
+        return tuple(int(v) for v in out)
+
+    def element_window(
+            self, grid_point: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
+        """[start, stop) element interval per axis for one grid point."""
+        bidx = self.block_index(grid_point)
+        return tuple((b * s, (b + 1) * s)
+                     for b, s in zip(bidx, self.block_shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class CapturedKernel:
+    """Snapshot of one ``pallas_call`` as issued by a wrapper."""
+
+    kernel_name: str
+    kernel_loc: Tuple[str, int]            # builder file:line (K2/K3 anchor)
+    grid: Tuple[int, ...]
+    in_blocks: Tuple[BlockModel, ...]
+    out_blocks: Tuple[BlockModel, ...]
+    scratch_blocks: Tuple[BlockModel, ...]
+
+    @property
+    def all_blocks(self) -> Tuple[BlockModel, ...]:
+        return self.in_blocks + self.out_blocks + self.scratch_blocks
+
+    def grid_size(self) -> int:
+        return int(math.prod(self.grid)) if self.grid else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelModel:
+    """Everything kernelcheck needs about one (op, shape class) pair."""
+
+    op: str
+    shape_class: Dict[str, int]
+    wrapper_loc: Tuple[str, int]           # ops.py wrapper (K1/K4/K5 anchor)
+    captured: Tuple[CapturedKernel, ...]
+    out_shapes: Tuple[Tuple[Tuple[int, ...], str], ...]  # wrapper results
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+def _block_models(role: str, specs, operands) -> Tuple[BlockModel, ...]:
+    models = []
+    for i, (spec, op_aval) in enumerate(zip(specs, operands)):
+        shape = tuple(op_aval.shape)
+        bshape = tuple(int(s) for s in spec.block_shape)
+        models.append(BlockModel(
+            role=role, index=i, block_shape=bshape,
+            dtype=jnp.dtype(op_aval.dtype).name, operand_shape=shape,
+            index_map=spec.index_map))
+    return tuple(models)
+
+
+def _scratch_models(shapes) -> Tuple[BlockModel, ...]:
+    models = []
+    for i, ref in enumerate(_as_list(shapes)):
+        models.append(BlockModel(
+            role="scratch", index=i,
+            block_shape=tuple(int(s) for s in ref.shape),
+            dtype=jnp.dtype(ref.dtype).name, operand_shape=()))
+    return tuple(models)
+
+
+class PallasCapture:
+    """Context manager that records every ``pallas_call`` issued inside.
+
+    ``unwrap`` maps module objects to attribute names whose ``jax.jit``
+    wrapper should be bypassed for the duration (so tracing re-runs the
+    builder instead of hitting the executable cache)."""
+
+    def __init__(self, unwrap: Sequence[Tuple[Any, str]] = ()):
+        self.records: List[CapturedKernel] = []
+        self._unwrap = list(unwrap)
+        self._stack: Optional[contextlib.ExitStack] = None
+
+    def __enter__(self) -> "PallasCapture":
+        import jax.experimental.pallas as pl_mod
+
+        self._stack = contextlib.ExitStack()
+        real = pl_mod.pallas_call
+        records = self.records
+
+        def fake_pallas_call(kernel, **kwargs):
+            def runner(*operands):
+                grid = kwargs.get("grid", ())
+                if isinstance(grid, int):
+                    grid = (grid,)
+                in_specs = _as_list(kwargs.get("in_specs"))
+                out_specs = _as_list(kwargs.get("out_specs"))
+                out_shape = _as_list(kwargs.get("out_shape"))
+                records.append(CapturedKernel(
+                    kernel_name=getattr(inspect.unwrap(
+                        kernel.func if isinstance(kernel, functools.partial)
+                        else kernel), "__name__", "<kernel>"),
+                    kernel_loc=source_loc(kernel),
+                    grid=tuple(int(g) for g in grid),
+                    in_blocks=_block_models("in", in_specs, operands),
+                    out_blocks=_block_models("out", out_specs, out_shape),
+                    scratch_blocks=_scratch_models(
+                        kwargs.get("scratch_shapes")),
+                ))
+                outs = [jnp.zeros(o.shape, o.dtype) for o in out_shape]
+                if isinstance(kwargs.get("out_shape"), (list, tuple)):
+                    return outs
+                return outs[0]
+            return runner
+
+        def _restore():
+            pl_mod.pallas_call = real
+
+        pl_mod.pallas_call = fake_pallas_call
+        self._stack.callback(_restore)
+
+        for mod, name in self._unwrap:
+            orig = getattr(mod, name)
+            setattr(mod, name, inspect.unwrap(orig))
+            self._stack.callback(setattr, mod, name, orig)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._stack is not None:
+            self._stack.close()
+            self._stack = None
+
+
+def capture_kernel(reg, shapes: Dict[str, int]) -> KernelModel:
+    """Abstractly trace one registry entry over one shape class.
+
+    ``reg`` is a ``repro.kernels.ops.RegisteredKernel``. The wrapper runs
+    under ``jax.eval_shape`` with ShapeDtypeStruct inputs — no kernel
+    bodies execute, no buffers materialize; only the ``pallas_call``
+    geometry is recorded.
+    """
+    from repro.kernels import ops as ops_module
+
+    args, kwargs = reg.make_inputs(shapes, True)
+    unwrap = ([(ops_module, reg.pallas_symbol)]
+              if reg.pallas_symbol else [])
+    with PallasCapture(unwrap=unwrap) as cap:
+        out = jax.eval_shape(
+            functools.partial(reg.wrapper, impl="pallas", **kwargs), *args)
+    flat = jax.tree_util.tree_leaves(out)
+    return KernelModel(
+        op=reg.op,
+        shape_class=dict(shapes),
+        wrapper_loc=source_loc(reg.wrapper),
+        captured=tuple(cap.records),
+        out_shapes=tuple((tuple(o.shape), jnp.dtype(o.dtype).name)
+                         for o in flat),
+    )
+
+
+def grid_points(grid: Sequence[int],
+                cap: int = FULL_ENUM_CAP) -> List[Tuple[int, ...]]:
+    """Grid points for interval analysis: the full grid when it has at
+    most ``cap`` points, otherwise the corner set (index maps here are
+    affine in the grid indices, so extremes occur at corners)."""
+    if not grid:
+        return [()]
+    total = int(math.prod(grid))
+    if total <= cap:
+        return list(itertools.product(*(range(g) for g in grid)))
+    corners = itertools.product(*(sorted({0, g - 1}) for g in grid))
+    return [tuple(c) for c in corners]
+
+
+# -- K5 arm: jaxpr-derived device cost ---------------------------------------
+
+# pure data-movement / layout primitives: 0 flops
+_MOVEMENT = frozenset({
+    "broadcast_in_dim", "reshape", "transpose", "slice", "dynamic_slice",
+    "dynamic_update_slice", "concatenate", "squeeze", "expand_dims",
+    "convert_element_type", "bitcast_convert_type", "iota", "pad", "copy",
+    "rev", "gather", "scatter", "device_put", "stop_gradient", "real",
+    "imag", "empty", "split",
+})
+
+# structured higher-order primitives: recurse into the inner jaxpr
+_CALL_PRIMS = frozenset({"pjit", "closed_call", "custom_jvp_call",
+                         "custom_vjp_call", "custom_vjp_call_jaxpr",
+                         "remat", "checkpoint"})
+
+
+def _aval_elems(v) -> int:
+    try:
+        return int(math.prod(v.aval.shape))
+    except Exception:
+        return 1
+
+
+def _aval_bytes(v) -> int:
+    try:
+        return _aval_elems(v) * jnp.dtype(v.aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _first_inner_jaxpr(params: Dict[str, Any]):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in params and params[key] is not None:
+            inner = params[key]
+            return getattr(inner, "jaxpr", inner)
+    return None
+
+
+def _eqn_flops(eqn) -> float:
+    name = eqn.primitive.name
+    if name in _MOVEMENT:
+        return 0.0
+    out_elems = sum(_aval_elems(v) for v in eqn.outvars)
+
+    if name == "dot_general":
+        ((lhs_c, _rhs_c), (lhs_b, _rhs_b)) = eqn.params["dimension_numbers"]
+        lhs_shape = eqn.invars[0].aval.shape
+        contract = math.prod(lhs_shape[d] for d in lhs_c) or 1
+        # out_elems already includes batch * M * N
+        first_out = _aval_elems(eqn.outvars[0])
+        return 2.0 * first_out * contract
+    if name == "top_k":
+        n = _aval_elems(eqn.invars[0])
+        k = max(2, int(eqn.params.get("k", 2)))
+        return float(n) * math.log2(k)
+    if name == "sort":
+        n = _aval_elems(eqn.invars[0])
+        last = eqn.invars[0].aval.shape[-1] if eqn.invars[0].aval.shape else 2
+        return float(n) * math.log2(max(2, last))
+    if name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "reduce_and", "reduce_or", "reduce_xor", "argmax", "argmin",
+                "cumsum", "cumprod", "cummax", "cummin",
+                "reduce_precision"):
+        return float(sum(_aval_elems(v) for v in eqn.invars))
+
+    if name == "scan":
+        inner = _first_inner_jaxpr(eqn.params)
+        length = int(eqn.params.get("length", 1))
+        return length * _jaxpr_flops(inner) if inner is not None else 0.0
+    if name == "while":
+        body = eqn.params.get("body_jaxpr")
+        cond = eqn.params.get("cond_jaxpr")
+        total = 0.0
+        for j in (body, cond):
+            if j is not None:
+                total += _jaxpr_flops(getattr(j, "jaxpr", j))
+        return total
+    if name == "cond":
+        branches = eqn.params.get("branches", ())
+        costs = [_jaxpr_flops(getattr(b, "jaxpr", b)) for b in branches]
+        return max(costs) if costs else 0.0
+    if name in _CALL_PRIMS:
+        inner = _first_inner_jaxpr(eqn.params)
+        return _jaxpr_flops(inner) if inner is not None else 0.0
+
+    # default: one lane-op per output element (elementwise / select / cmp)
+    return float(out_elems)
+
+
+def _jaxpr_flops(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        total += _eqn_flops(eqn)
+    return total
+
+
+def jaxpr_device_cost(fn: Callable, *args, **kwargs) -> Dict[str, float]:
+    """Independent {flops, hbm_bytes} estimate from ``fn``'s jaxpr.
+
+    flops: lane-op count walked from the equation list (matmuls at
+    2·M·N·K, reductions at input size, sorts/top-k with their log factor,
+    movement free) — same unit convention as ``repro.obs.cost``.
+    hbm_bytes: one round-trip of the jaxpr's inputs and outputs (the
+    minimal traffic any schedule must pay)."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    flops = _jaxpr_flops(closed.jaxpr)
+    io_bytes = (sum(_aval_bytes(v) for v in closed.jaxpr.invars)
+                + sum(_aval_bytes(v) for v in closed.jaxpr.outvars))
+    return {"flops": float(flops), "hbm_bytes": float(io_bytes)}

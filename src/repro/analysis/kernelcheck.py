@@ -1,0 +1,403 @@
+"""kernelcheck: static K1–K5 analysis of the Pallas kernel registry
+(DESIGN.md §16) — ``python -m repro.analysis.kernelcheck``.
+
+Every op in ``repro.kernels.ops.KERNEL_REGISTRY`` is abstractly traced
+(repro/analysis/kernel_model.py) over its representative shape classes and
+checked against five machine-verifiable invariants:
+
+  K1  VMEM footprint — resident block tiles (double-buffered in/out),
+      scratch and the annotation's declared transient peak must fit the
+      per-platform VMEM budget for every shape class.
+  K2  index-map bounds — interval analysis over the grid: every BlockSpec
+      window must stay inside the (padded) operand for every grid point.
+  K3  write-race — distinct grid points mapping to the same *output*
+      block is an error unless the kernel's annotation declares those
+      grid dimensions as deliberate sequential revisits (the TPU
+      output-revisiting accumulate; unsafe under "arbitrary" semantics).
+  K4  sentinel discipline — the wrapper must declare how padded lanes are
+      neutralized (``pad_contained`` slicing or a ``SentinelSpec``), the
+      declared sentinel constant must actually appear in the wrapper or
+      kernel source, and the registry's adversarial probes (tiny concrete
+      runs built so an unmasked pad lane *wins*) must pass. The PR 4
+      shard-padding leak is the motivating case.
+  K5  cost-model cross-check — the analytic ``repro.obs.cost`` model the
+      wrapper's ``_charge`` call bills must agree with an independent
+      jaxpr-derived flop/byte count of the ref oracle within per-op
+      tolerance, and the billed cost function must be the registered one.
+
+Findings are the standard typed ``Finding`` records (rule ids K1–K5),
+suppressible with ``# repro-lint: allow[Kn] <why>`` pragmas on the
+anchored line (or the line above) and by the shared lint baseline when
+run through ``python -m repro.analysis.lint --kernels``. The
+machine-readable report (``--report``) carries the per-kernel VMEM/cost
+table consumed by ``benchmarks/regress.py`` (bench kind "kernelcheck")
+and rendered by ``benchmarks/roofline_report.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import functools
+import inspect
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import kernel_model as km
+from repro.analysis import rules
+from repro.analysis.findings import Finding
+
+RULE_IDS = ("K1", "K2", "K3", "K4", "K5")
+
+# Usable VMEM per TPU core (~16 MiB architecturally; the compiler keeps a
+# slice for itself, so budget a conservative fraction for kernel tiles).
+VMEM_BUDGET_BYTES: Dict[str, int] = {"tpu": 16 * 1024 * 1024}
+DOUBLE_BUFFER = 2          # in/out blocks are double-buffered by the pipeline
+
+HINTS = {
+    "K1": "shrink the block tiles (or the annotation's transient peak) "
+          "until 2*(in+out) + scratch + extra fits the VMEM budget",
+    "K2": "fix the BlockSpec index_map / grid so every block window stays "
+          "inside the padded operand (DESIGN.md §16)",
+    "K3": "either make the output grid a bijective partition or declare "
+          "the accumulating grid dims in the kernel's "
+          "KernelAnnotation(revisit_dims=...) — revisiting is only safe "
+          "because the TPU grid is sequential",
+    "K4": "declare the padding discipline (pad_contained or SentinelSpec) "
+          "and mask padded lanes before any top-k/merge consumes them "
+          "(the PR 4 shard-padding leak)",
+    "K5": "re-derive the analytic cost model (repro/obs/cost.py) or fix "
+          "the _charge call so billed cost matches the kernel's real "
+          "work within tolerance",
+}
+
+
+def _loc_finding(rule: str, loc: Tuple[str, int], message: str) -> Finding:
+    return Finding(rule, loc[0], loc[1], message, HINTS[rule])
+
+
+# -- K1: VMEM footprint -------------------------------------------------------
+
+
+def vmem_usage(ck: km.CapturedKernel, annotation) -> int:
+    """Modelled resident VMEM bytes for one captured kernel: pipelined
+    in/out tiles double-buffered, scratch single-buffered, plus the
+    annotation's declared transient peak (broadcast/accumulator tiles the
+    BlockSpecs can't see)."""
+    in_b = sum(b.block_bytes() for b in ck.in_blocks)
+    out_b = sum(b.block_bytes() for b in ck.out_blocks)
+    scratch = sum(b.block_bytes() for b in ck.scratch_blocks)
+    extra = 0
+    if annotation is not None and annotation.extra_vmem is not None:
+        extra = int(annotation.extra_vmem(
+            [b.block_shape for b in ck.in_blocks],
+            [b.block_shape for b in ck.out_blocks]))
+    return DOUBLE_BUFFER * (in_b + out_b) + scratch + extra
+
+
+def check_k1(model: km.KernelModel, annotation,
+             budget: int) -> Tuple[List[Finding], List[int]]:
+    findings, usages = [], []
+    for ck in model.captured:
+        used = vmem_usage(ck, annotation)
+        usages.append(used)
+        if used > budget:
+            findings.append(_loc_finding(
+                "K1", model.wrapper_loc,
+                f"`{model.op}` shape class {model.shape_class} needs "
+                f"{used / 2**20:.2f} MiB VMEM "
+                f"(budget {budget / 2**20:.0f} MiB)"))
+    return findings, usages
+
+
+# -- K2: index-map bounds -----------------------------------------------------
+
+
+def check_k2(model: km.KernelModel) -> List[Finding]:
+    findings: List[Finding] = []
+    for ck in model.captured:
+        points = km.grid_points(ck.grid)
+        for blk in ck.in_blocks + ck.out_blocks:
+            if not blk.operand_shape:
+                continue
+            for pt in points:
+                window = blk.element_window(pt)
+                for axis, ((lo, hi), n) in enumerate(
+                        zip(window, blk.operand_shape)):
+                    if lo < 0 or hi > n:
+                        findings.append(_loc_finding(
+                            "K2", ck.kernel_loc,
+                            f"`{model.op}` {blk.role}[{blk.index}] block "
+                            f"window [{lo}, {hi}) exceeds operand axis "
+                            f"{axis} (size {n}) at grid point {pt} "
+                            f"(shape class {model.shape_class})"))
+                        break
+                else:
+                    continue
+                break   # one finding per block is enough
+    return findings
+
+
+# -- K3: write-race over output blocks ----------------------------------------
+
+
+def check_k3(model: km.KernelModel, annotation) -> List[Finding]:
+    revisit = set(annotation.revisit_dims) if annotation else set()
+    findings: List[Finding] = []
+    for ck in model.captured:
+        points = km.grid_points(ck.grid)
+        for blk in ck.out_blocks:
+            writers: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+            for pt in points:
+                writers.setdefault(blk.block_index(pt), []).append(pt)
+            for bidx, pts in writers.items():
+                if len(pts) < 2:
+                    continue
+                varying = {d for d in range(len(ck.grid))
+                           if len({p[d] for p in pts}) > 1}
+                undeclared = varying - revisit
+                if undeclared:
+                    findings.append(_loc_finding(
+                        "K3", ck.kernel_loc,
+                        f"`{model.op}` out[{blk.index}] block {bidx} is "
+                        f"written by {len(pts)} grid points (grid dims "
+                        f"{sorted(undeclared)} vary) without a "
+                        f"revisit_dims declaration"))
+                    break   # one finding per output block
+    return findings
+
+
+# -- K4: sentinel discipline --------------------------------------------------
+
+
+def _source_of(fn) -> str:
+    try:
+        return inspect.getsource(inspect.unwrap(fn))
+    except (TypeError, OSError):
+        return ""
+
+
+def check_k4(reg, model: km.KernelModel, *,
+             run_probes: bool = True) -> List[Finding]:
+    ann = reg.annotation
+    findings: List[Finding] = []
+    if ann.sentinel is None and not ann.pad_contained:
+        findings.append(_loc_finding(
+            "K4", model.wrapper_loc,
+            f"`{reg.op}` declares no padding discipline (neither "
+            f"pad_contained nor a SentinelSpec) — padded lanes are "
+            f"unaccounted for"))
+    if ann.sentinel is not None:
+        v = ann.sentinel.value
+        # accept equivalent spellings: -1e+30 / -1e30 / -1 / -1.0
+        tokens = {repr(v), str(v), f"{v:g}", f"{v:g}".replace("e+", "e")}
+        token = sorted(tokens)[0]
+        wrapper_src = _source_of(reg.wrapper)
+        builder_src = ""
+        if reg.pallas_symbol is not None:
+            mod = inspect.getmodule(inspect.unwrap(reg.wrapper))
+            builder = getattr(mod, reg.pallas_symbol, None)
+            if builder is not None:
+                builder_mod = inspect.getmodule(inspect.unwrap(builder))
+                builder_src = _source_of(builder_mod) if builder_mod else ""
+        if not any(t in wrapper_src or t in builder_src for t in tokens):
+            findings.append(_loc_finding(
+                "K4", model.wrapper_loc,
+                f"`{reg.op}` declares sentinel {token} "
+                f"({ann.sentinel.kind}) but the constant appears in "
+                f"neither the wrapper nor the kernel module — the "
+                f"declaration is stale"))
+    if run_probes and reg.probe is not None:
+        for problem in reg.probe():
+            findings.append(_loc_finding(
+                "K4", model.wrapper_loc, f"probe: {problem}"))
+    return findings
+
+
+# -- K5: cost-model cross-check -----------------------------------------------
+
+
+def _billed_cost_fn_name(wrapper, op: str) -> Optional[str]:
+    """AST arm: the cost-fn name passed to ``_charge("<op>", <fn>, ...)``
+    inside the wrapper's source, or None when no such call parses."""
+    src = _source_of(wrapper)
+    if not src:
+        return None
+    try:
+        tree = ast.parse(inspect.cleandoc(src))
+    except (SyntaxError, IndentationError):
+        try:
+            import textwrap
+            tree = ast.parse(textwrap.dedent(src))
+        except SyntaxError:
+            return None
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and (rules._dotted(node.func) or ""
+                     ).split(".")[-1] == "_charge"
+                and len(node.args) >= 2
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == op):
+            return (rules._dotted(node.args[1]) or "").split(".")[-1]
+    return None
+
+
+def check_k5(reg, model: km.KernelModel,
+             shapes: Dict[str, int]) -> Tuple[List[Finding], Dict[str, Any]]:
+    findings: List[Finding] = []
+    declared = reg.cost_fn(*reg.cost_args(shapes))
+    args, kwargs = reg.make_inputs(shapes, False)
+    derived = km.jaxpr_device_cost(
+        functools.partial(reg.ref_fn, **kwargs), *args)
+    ratios: Dict[str, float] = {}
+    for metric in ("flops", "hbm_bytes"):
+        a, b = float(declared[metric]), float(derived[metric])
+        tol = reg.cost_tol if metric == "flops" else \
+            (reg.bytes_tol if reg.bytes_tol is not None else reg.cost_tol)
+        if min(a, b) <= 0:
+            ratio = float("inf") if max(a, b) > 0 else 1.0
+        else:
+            ratio = max(a, b) / min(a, b)
+        ratios[metric] = ratio
+        if ratio > tol:
+            findings.append(_loc_finding(
+                "K5", model.wrapper_loc,
+                f"`{reg.op}` {metric}: analytic model bills {a:.3g} but "
+                f"the oracle jaxpr derives {b:.3g} (x{ratio:.1f} apart, "
+                f"tolerance x{tol:g}; shape class {shapes})"))
+    billed = _billed_cost_fn_name(reg.wrapper, reg.op)
+    if billed is not None and billed != reg.cost_fn.__name__:
+        findings.append(_loc_finding(
+            "K5", model.wrapper_loc,
+            f"`{reg.op}` bills `{billed}` via _charge but the registry "
+            f"declares `{reg.cost_fn.__name__}` — attribution drift"))
+    detail = {"declared": {k: float(v) for k, v in declared.items()},
+              "jaxpr": {k: float(v) for k, v in derived.items()},
+              "ratio": ratios}
+    return findings, detail
+
+
+# -- driver -------------------------------------------------------------------
+
+
+def _filter_pragmas(findings: Sequence[Finding]) -> List[Finding]:
+    """Apply ``# repro-lint: allow[Kn] <why>`` pragmas at the anchored
+    line (or the line above). Unjustified pragmas are already reported as
+    R0 by the per-file AST pass, so they are not re-emitted here."""
+    allows_cache: Dict[str, Dict[int, set]] = {}
+    out: List[Finding] = []
+    for f in findings:
+        path = km.REPO_ROOT / f.path
+        if not path.exists():
+            out.append(f)
+            continue
+        if f.path not in allows_cache:
+            allows_cache[f.path] = rules.parse_pragmas(
+                path.read_text(), f.path)[0]
+        if not rules._suppressed(allows_cache[f.path], f.rule, f.line):
+            out.append(f)
+    return out
+
+
+def run_kernelcheck(registry: Optional[Dict[str, Any]] = None, *,
+                    probes: bool = True, platform: str = "tpu",
+                    apply_pragmas: bool = True
+                    ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Run K1–K5 over ``registry`` (default: the real KERNEL_REGISTRY).
+
+    Returns ``(findings, report)`` — findings pragma-filtered (unless
+    ``apply_pragmas=False``, used by fixture tests), report the
+    machine-readable per-kernel VMEM/cost table (bench kind
+    "kernelcheck")."""
+    if registry is None:
+        from repro.kernels.ops import KERNEL_REGISTRY
+        registry = KERNEL_REGISTRY
+    budget = VMEM_BUDGET_BYTES[platform]
+
+    findings: List[Finding] = []
+    table: Dict[str, Any] = {}
+    for name, reg in registry.items():
+        rows = []
+        for shapes in reg.shape_classes:
+            model = km.capture_kernel(reg, shapes)
+            if not model.captured:
+                findings.append(_loc_finding(
+                    "K2", model.wrapper_loc,
+                    f"`{reg.op}` issued no pallas_call under shape class "
+                    f"{shapes} — nothing to analyze"))
+                continue
+            k1, usages = check_k1(model, reg.annotation, budget)
+            findings += k1
+            findings += check_k2(model)
+            findings += check_k3(model, reg.annotation)
+            k5, cost_detail = check_k5(reg, model, shapes)
+            findings += k5
+            ck = model.captured[0]
+            used = max(usages) if usages else 0
+            rows.append({
+                "shapes": dict(shapes),
+                "grid": list(ck.grid),
+                "kernel": ck.kernel_name,
+                "vmem_bytes": int(used),
+                "vmem_frac": used / budget,
+                **cost_detail,
+            })
+        # K4 is per-op (probes run tiny concrete kernels, not per class)
+        model0 = km.capture_kernel(reg, reg.shape_classes[0])
+        findings += check_k4(reg, model0, run_probes=probes)
+        table[name] = {"classes": rows}
+
+    if apply_pragmas:
+        findings = _filter_pragmas(findings)
+    findings = sorted(set(findings))
+    report = {
+        "bench": "kernelcheck",
+        "platform": platform,
+        "vmem_budget_bytes": budget,
+        "clean": 1 if not findings else 0,
+        "findings": [{"rule": f.rule, "path": f.path, "line": f.line,
+                      "message": f.message} for f in findings],
+        "kernels": table,
+    }
+    return findings, report
+
+
+def write_report(report: Dict[str, Any], path: Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+
+
+def run(argv: Optional[Sequence[str]] = None, *, stdout=None) -> int:
+    """CLI entry; exit 0 clean / 1 findings. The lint CLI (``python -m
+    repro.analysis.lint --kernels``) runs the same checks baseline-aware;
+    this standalone form is baseline-free by design (acceptance: the repo
+    registry must be clean with an empty baseline)."""
+    out = stdout or sys.stdout
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kernelcheck",
+        description="Pallas kernel static analyzer (K1-K5)")
+    ap.add_argument("--report", default=None,
+                    help="write the machine-readable VMEM/cost report "
+                         "(bench kind 'kernelcheck') to this path")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the concrete K4 adversarial probes "
+                         "(abstract-only analysis, no kernel executes)")
+    args = ap.parse_args(argv)
+    findings, report = run_kernelcheck(probes=not args.no_probes)
+    for f in findings:
+        print(f.format(), file=out)
+    if args.report:
+        write_report(report, Path(args.report))
+        print(f"report -> {args.report}", file=out)
+    ops_n = len(report["kernels"])
+    classes_n = sum(len(v["classes"]) for v in report["kernels"].values())
+    print(f"kernelcheck: {ops_n} op(s), {classes_n} shape class(es), "
+          f"{len(findings)} finding(s)", file=out)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -3,12 +3,17 @@
 Runs the AST invariant rules (R1–R6, repro/analysis/rules.py) over
 ``src/repro`` and ``benchmarks/``, subtracts the committed baseline, and
 exits 1 on any *new* finding. ``--contracts`` additionally runs the
-jaxpr/trace contract analyzer (repro/analysis/contracts.py) — slower
-(imports jax, builds tiny indexes), which is why CI opts in explicitly
-and a quick local run stays sub-second.
+jaxpr/trace contract analyzer (repro/analysis/contracts.py); ``--kernels``
+additionally runs the Pallas kernel static analyzer (K1–K5,
+repro/analysis/kernelcheck.py) over the registered kernel models. Both
+are slower (import jax, trace kernels), which is why CI opts in
+explicitly and a quick local run stays sub-second.
 
     python -m repro.analysis.lint                    # AST rules, repo
     python -m repro.analysis.lint --contracts        # + trace contracts
+    python -m repro.analysis.lint --kernels          # + kernelcheck K1-K5
+    python -m repro.analysis.lint --kernels \
+        --kernel-report out.json                     # + VMEM/cost report
     python -m repro.analysis.lint --fix-baseline     # re-record baseline
     python -m repro.analysis.lint path/to/tree ...   # custom roots
 
@@ -55,6 +60,14 @@ def run(argv: Optional[Sequence[str]] = None, *,
     ap.add_argument("--contracts", action="store_true",
                     help="also run the jaxpr/trace contract analyzer "
                          "(needs jax; seconds, not milliseconds)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the Pallas kernel static analyzer "
+                         "(K1-K5; needs jax, runs tiny interpret-mode "
+                         "probes)")
+    ap.add_argument("--kernel-report", default=None, metavar="PATH",
+                    help="with --kernels: write the machine-readable "
+                         "VMEM/cost report (bench kind 'kernelcheck') "
+                         "to PATH")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-finding hints")
     args = ap.parse_args(argv)
@@ -71,6 +84,15 @@ def run(argv: Optional[Sequence[str]] = None, *,
     if args.contracts:
         from repro.analysis import contracts
         found.extend(contracts.run_contracts().findings)
+    if args.kernels:
+        from repro.analysis import kernelcheck
+        kfound, kreport = kernelcheck.run_kernelcheck()
+        found.extend(kfound)
+        if args.kernel_report:
+            kernelcheck.write_report(kreport, Path(args.kernel_report))
+    elif args.kernel_report:
+        print("error: --kernel-report requires --kernels", file=out)
+        return 2
     found = sorted(set(found))
 
     baseline_path = Path(args.baseline) if args.baseline \

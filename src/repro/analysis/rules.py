@@ -13,8 +13,11 @@ only as prose; these rules make a machine check them on every commit:
       (DESIGN.md §13 "spans never enter jit").
   R3  every kernel op registered in ``kernels/ops.py`` (a call to
       ``_resolve(impl, "<op>")``) must reference a ref oracle that exists
-      in ``kernels/ref.py`` and make a ``_charge("<op>", ...)`` cost
-      call — the conformance + cost-attribution contract of PRs 1 and 7.
+      in ``kernels/ref.py``, make a ``_charge("<op>", ...)`` cost
+      call — the conformance + cost-attribution contract of PRs 1 and
+      7 — and have an interpret-mode parity test (some ``tests/`` call of
+      the op with ``impl="pallas"``) so the Pallas path never drifts from
+      the oracle unexercised.
   R4  dataclasses used as jit-static arguments (docstring tagged
       ``jit-static``) must be ``frozen=True``, keep value equality, and
       exclude runtime-only fields (``tracker``) from ``__eq__``/
@@ -76,8 +79,9 @@ HINTS = {
     "R2": "record metrics host-side after the device sync point; spans "
           "and trackers must never enter traced code (DESIGN.md §13)",
     "R3": "register the op fully: a _ref.<op>_ref oracle in "
-          "kernels/ref.py and a _charge(\"<op>\", ...) cost call "
-          "(DESIGN.md §14)",
+          "kernels/ref.py, a _charge(\"<op>\", ...) cost call "
+          "(DESIGN.md §14) and an interpret-mode parity test calling "
+          "the op with impl=\"pallas\" under tests/",
     "R4": "declare @dataclasses.dataclass(frozen=True) and exclude "
           "runtime-only fields with dataclasses.field(compare=False)",
     "R5": "route dtype widening through repro.compat (the only module "
@@ -319,13 +323,41 @@ def _r6_block_until_ready(tree: ast.Module, rel: str) -> Iterable[Finding]:
 # -- cross-module rule: kernel registry (R3) ----------------------------------
 
 
+def _pallas_parity_ops(tests_root: Path) -> Set[str]:
+    """Names of functions called with ``impl="pallas"`` anywhere under
+    ``tests_root`` — the op wrappers whose Pallas arm has an
+    interpret-mode parity test."""
+    called: Set[str] = set()
+    for p in sorted(Path(tests_root).rglob("test_*.py")):
+        try:
+            tree = ast.parse(p.read_text())
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = (_dotted(node.func) or "").split(".")[-1]
+            for kw in node.keywords:
+                if (kw.arg == "impl" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value == "pallas"):
+                    called.add(name)
+    return called
+
+
 def check_kernel_registry(ops_path: Path, ref_path: Path,
-                          rel_ops: Optional[str] = None) -> List[Finding]:
+                          rel_ops: Optional[str] = None,
+                          tests_root: Optional[Path] = None
+                          ) -> List[Finding]:
     """R3 over a kernels/ops.py + kernels/ref.py pair: every op name
     registered through ``_resolve(impl, "<op>")`` must make a
-    ``_charge("<op>", ...)`` call and reference an oracle ``_ref.<fn>``
-    that exists in ref.py."""
+    ``_charge("<op>", ...)`` call, reference an oracle ``_ref.<fn>``
+    that exists in ref.py and — when ``tests_root`` is given — be called
+    with ``impl="pallas"`` somewhere under it (interpret-mode parity
+    coverage; the wrapper function is named after its op)."""
     rel_ops = rel_ops or str(ops_path)
+    parity_ops: Optional[Set[str]] = None
+    if tests_root is not None and Path(tests_root).exists():
+        parity_ops = _pallas_parity_ops(Path(tests_root))
     ops_tree = ast.parse(Path(ops_path).read_text())
     ref_tree = ast.parse(Path(ref_path).read_text())
     ref_fns = {n.name for n in ast.walk(ref_tree)
@@ -371,6 +403,12 @@ def check_kernel_registry(ops_path: Path, ref_path: Path,
                         "R3", rel_ops, fn.lineno,
                         f"kernel op `{op}` references _ref.{o} which "
                         f"does not exist in kernels/ref.py", HINTS["R3"]))
+        if parity_ops is not None and fn.name not in parity_ops:
+            out.append(Finding(
+                "R3", rel_ops, fn.lineno,
+                f"kernel op `{op}` has no interpret-mode parity test "
+                f"(no tests/ call of `{fn.name}` with impl=\"pallas\")",
+                HINTS["R3"]))
     return out
 
 
@@ -418,5 +456,6 @@ def lint_tree(roots: Sequence[Path], repo_root: Path) -> List[Finding]:
             if ref_path.exists():
                 rel = ops_path.resolve().relative_to(repo_root).as_posix()
                 findings.extend(
-                    check_kernel_registry(ops_path, ref_path, rel))
+                    check_kernel_registry(ops_path, ref_path, rel,
+                                          tests_root=repo_root / "tests"))
     return sorted(set(findings))

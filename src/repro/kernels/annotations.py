@@ -1,0 +1,75 @@
+"""Kernel model annotations consumed by kernelcheck (DESIGN.md §16).
+
+Every Pallas kernel module declares a :class:`KernelAnnotation` next to its
+``pallas_call`` builder. The annotation is the kernel author's *claim sheet*:
+which grid dimensions deliberately revisit the same output block (the TPU
+sequential-accumulate pattern that would be a write race under parallel
+"arbitrary" grid semantics), how many transient VMEM bytes the kernel body
+materializes beyond its block tiles and scratch, and what sentinel contract
+the ops.py wrapper upholds for padded lanes. kernelcheck
+(repro/analysis/kernelcheck.py) verifies everything it can against the
+captured ``pallas_call`` parameters and flags any claim the model
+contradicts — an undeclared revisit is a K3 finding, a padding wrapper with
+no sentinel claim is a K4 finding.
+
+This module is deliberately dependency-free (no jax import): annotations
+must be importable by the AST-level lint without pulling in the runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+# Transient-intermediate estimators receive the in/out block shapes captured
+# from the pallas_call and return bytes. Kept as plain callables so each
+# kernel can state its own peak (broadcast tiles, concat buffers) in terms
+# of its tiling parameters.
+VmemEstimator = Callable[[Sequence[Tuple[int, ...]],
+                          Sequence[Tuple[int, ...]]], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelSpec:
+    """The documented padded-lane discipline of one kernel's wrapper.
+
+    ``kind`` names what carries the sentinel ("ids", "vals" or "match");
+    ``value`` is the documented constant (-1 for ids/match counts, a large
+    negative float standing in for -inf on values). kernelcheck K4
+    cross-references the constant against the wrapper/kernel source and
+    drives the registry's adversarial probe to verify it dynamically.
+    """
+
+    kind: str
+    value: float
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelAnnotation:
+    """Machine-checkable model claims for one Pallas kernel.
+
+    ``grid_names`` labels the grid axes for findings (“items axis”, not
+    “dim 1”). ``revisit_dims`` lists grid dimensions whose steps map to the
+    same output block *on purpose* — the sequential-grid accumulate /
+    output-revisiting pattern; any aliasing outside these dims is a K3
+    write race. ``extra_vmem`` estimates transient intermediate bytes the
+    body materializes (broadcast XOR tiles, concat merge buffers) for the
+    K1 footprint sum. ``pad_contained`` claims the wrapper slices every
+    padded lane off the result before returning (verified by the K4
+    adversarial parity probe); wrappers where padding can reach the caller
+    instead declare a :class:`SentinelSpec`.
+    """
+
+    name: str
+    grid_names: Tuple[str, ...]
+    revisit_dims: Tuple[int, ...] = ()
+    extra_vmem: Optional[VmemEstimator] = None
+    sentinel: Optional[SentinelSpec] = None
+    pad_contained: bool = False
+    note: str = ""
+
+    def describe_dim(self, dim: int) -> str:
+        if 0 <= dim < len(self.grid_names):
+            return f"{dim} ({self.grid_names[dim]})"
+        return str(dim)

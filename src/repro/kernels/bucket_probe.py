@@ -31,6 +31,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.annotations import KernelAnnotation
+
+# kernelcheck model claims (DESIGN.md §16). Both kernels partition their
+# output grid bijectively (no revisiting); both wrappers slice every padded
+# row/column off before returning. Transient peaks: the match kernel
+# broadcasts a (BQ, BB, W) XOR tile + int32 popcount tile and reduces to a
+# (BQ, BB) block; the gather kernel keeps ~4 (BQ, P) int32/bool masks live
+# inside its fori_loop body.
+MATCH_ANNOTATION = KernelAnnotation(
+    name="bucket_match",
+    grid_names=("queries", "buckets"),
+    extra_vmem=lambda ins, outs: (
+        2 * ins[0][0] * ins[1][0] * ins[0][1] * 4
+        + ins[0][0] * ins[1][0] * 4),
+    pad_contained=True,
+)
+GATHER_ANNOTATION = KernelAnnotation(
+    name="bucket_gather",
+    grid_names=("queries",),
+    extra_vmem=lambda ins, outs: 4 * outs[0][0] * outs[0][1] * 4,
+    pad_contained=True,
+    note="padded query rows carry a single covering run [0, num_probe) so "
+         "the in-kernel CSR walk stays in-contract; rows are sliced off",
+)
+
 
 def _match_kernel(q_ref, db_ref, out_ref, *, hash_bits: int):
     q = q_ref[...]                     # (BQ, W) uint32

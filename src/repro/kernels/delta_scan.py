@@ -23,6 +23,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.annotations import KernelAnnotation, SentinelSpec
+
+# kernelcheck model claims (DESIGN.md §16): pure output partition, XOR +
+# popcount broadcast transient like the directory match, and the -1 dead-
+# slot sentinel contract — padded slots ride the same ``live == 0`` mask as
+# tombstones, so the K4 probe must see -1 on every dead lane and >= 0 on
+# every live one.
+ANNOTATION = KernelAnnotation(
+    name="delta_scan",
+    grid_names=("queries", "slots"),
+    extra_vmem=lambda ins, outs: (
+        2 * ins[0][0] * ins[1][0] * ins[0][1] * 4
+        + 2 * outs[0][0] * outs[0][1] * 4),
+    sentinel=SentinelSpec(
+        kind="match", value=-1,
+        note="dead/padded slots fuse to -1 so the streaming merge ranks "
+             "them last without a second masking pass"),
+)
+
 
 def _delta_scan_kernel(q_ref, d_ref, live_ref, out_ref, *, hash_bits: int):
     q = q_ref[...]                      # (BQ, W) uint32

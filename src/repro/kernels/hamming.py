@@ -20,6 +20,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.annotations import KernelAnnotation
+
+# kernelcheck model claims (DESIGN.md §16): the (i, j) grid is a pure
+# output partition (no block revisiting), the body's transient peak is the
+# (BQ, BN, W) XOR broadcast plus its int32 popcount tile, and the wrapper
+# slices every padded row/column off the (Q, N) result before returning.
+ANNOTATION = KernelAnnotation(
+    name="hamming",
+    grid_names=("queries", "items"),
+    extra_vmem=lambda ins, outs: 2 * ins[0][0] * ins[1][0] * ins[0][1] * 4,
+    pad_contained=True,
+)
+
 
 def _hamming_kernel(q_ref, db_ref, out_ref):
     q = q_ref[...]                     # (BQ, W) uint32

@@ -31,7 +31,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.annotations import KernelAnnotation, SentinelSpec
+
 WORD = 32
+
+# kernelcheck model claims (DESIGN.md §16): the K-slab grid dimension
+# deliberately revisits the (i, j) output block (the f32 accumulator lives
+# in scratch across the K loop — sequential-grid accumulate, NOT safe under
+# "arbitrary" grid semantics); the transient peak is the (BN, BL) sign-bit
+# tile plus the shifted word tile on the final K step. Row/column padding
+# is sliced off by the wrapper; in-word bit padding is masked to 0 in the
+# last uint32 word (sign(0) = 1 would otherwise pollute Hamming distances).
+ANNOTATION = KernelAnnotation(
+    name="hash_encode",
+    grid_names=("rows", "code_bits", "k_slab"),
+    revisit_dims=(2,),
+    extra_vmem=lambda ins, outs: 2 * ins[0][0] * ins[1][1] * 4,
+    sentinel=SentinelSpec(
+        kind="bits", value=0,
+        note="padding bits of the final packed word are masked to 0"),
+    pad_contained=True,
+)
 
 
 def _encode_kernel(x_ref, a_ref, tail_ref, atail_ref, out_ref, acc_ref, *,

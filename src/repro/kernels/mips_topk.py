@@ -24,7 +24,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.annotations import KernelAnnotation, SentinelSpec
+
 NEG = -3.0e38
+
+# kernelcheck model claims (DESIGN.md §16): the item grid dimension
+# deliberately revisits the (i, 0) output blocks — the running top-k
+# buffer is the canonical TPU output-revisiting accumulate, safe only
+# because the minor grid axis is sequential. Transient peak: the (BQ, BN)
+# score tile plus the concatenated (BQ, K + BN) merge buffers (vals f32 +
+# ids i32). Padded item rows are the PR 4 shard-padding-leak surface: the
+# wrapper's sentinel feature column makes them score real_dot - 1e30 so
+# they rank strictly last even against negative real scores.
+ANNOTATION = KernelAnnotation(
+    name="mips_topk",
+    grid_names=("queries", "items"),
+    revisit_dims=(1,),
+    extra_vmem=lambda ins, outs: (
+        ins[0][0] * ins[1][0] * 4
+        + 2 * ins[0][0] * (ins[1][0] + outs[0][1]) * 4),
+    sentinel=SentinelSpec(
+        kind="vals", value=-1e30,
+        note="padded item rows score real_dot - 1e30 via the appended "
+             "sentinel feature column; ids of padded rows must never "
+             "surface in the returned top-k"),
+)
 
 
 def _iter_topk(scores: jax.Array, ids: jax.Array, k: int):

@@ -13,14 +13,21 @@ otherwise, and slices padding off the result. ``impl`` selects:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.obs import cost as _cost
+from repro.kernels import bucket_probe as _bucket_probe_mod
+from repro.kernels import delta_scan as _delta_scan_mod
+from repro.kernels import hamming as _hamming_mod
+from repro.kernels import hash_encode as _hash_encode_mod
+from repro.kernels import mips_topk as _mips_topk_mod
+from repro.kernels.annotations import KernelAnnotation
 from repro.kernels.bucket_probe import (bucket_gather_pallas,
                                         bucket_match_pallas)
 from repro.kernels.delta_scan import delta_scan_pallas
@@ -68,6 +75,19 @@ def _charge(op: str, cost_fn, *args) -> None:
     tr.count(f"repro.kernels.cost.{op}.hbm_bytes", c["hbm_bytes"])
 
 
+def _require_nonempty(op: str, **dims: int) -> None:
+    """Typed degenerate-shape guard: every listed dimension must be >= 1.
+
+    The wrappers below round shapes up to tile multiples; a zero row or
+    column count would silently round up to a phantom tile (or lower a
+    zero-size grid) instead of failing loudly. Raise before padding."""
+    zero = [f"{k}={v}" for k, v in dims.items() if v <= 0]
+    if zero:
+        raise ValueError(
+            f"{op}: zero-size input dimension(s) {', '.join(zero)} — "
+            f"every listed dimension must be >= 1")
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     n = x.shape[axis]
     pad = (-n) % mult
@@ -90,6 +110,7 @@ def hash_encode(x: jax.Array, A: jax.Array,
     impl = _resolve(impl, "hash_encode")
     N, d = x.shape
     L = A.shape[1]
+    _require_nonempty("hash_encode", N=N, d=d, L=L)
     _charge("hash_encode", _cost.hash_encode_cost, N, d, L)
     if tail is None:
         tail = jnp.zeros((N,), x.dtype)
@@ -119,6 +140,8 @@ def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
                  impl: str = "auto") -> jax.Array:
     """All-pairs Hamming distances (Q, W) x (N, W) -> (Q, N) int32."""
     impl = _resolve(impl, "hamming_scan")
+    _require_nonempty("hamming_scan", Q=q_codes.shape[0],
+                      N=db_codes.shape[0], W=q_codes.shape[1])
     _charge("hamming_scan", _cost.packed_scan_cost, q_codes.shape[0],
             db_codes.shape[0], 32 * q_codes.shape[1])
     if impl == "ref":
@@ -135,12 +158,12 @@ def mips_topk(queries: jax.Array, items: jax.Array, k: int, *,
               impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Exact top-k inner products: vals (Q, k) f32, ids (Q, k) int32."""
     impl = _resolve(impl, "mips_topk")
+    _require_nonempty("mips_topk", Q=queries.shape[0], N=items.shape[0],
+                      d=queries.shape[1], k=k)
     if k > items.shape[0]:
         raise ValueError(f"k={k} must not exceed the item count "
                          f"N={items.shape[0]}")
-    _charge("mips_topk", lambda q, n, d, kk: {
-        m: _cost.re_rank_cost(q, n, d)[m] + _cost.top_k_cost(q, n, kk)[m]
-        for m in ("flops", "hbm_bytes")},
+    _charge("mips_topk", _cost.mips_topk_cost,
             queries.shape[0], items.shape[0], queries.shape[1], k)
     if impl == "ref":
         return _ref.mips_topk_ref(queries, items, k)
@@ -167,6 +190,8 @@ def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
     """Bucket-directory match counts: (Q, W) x (B, W) -> (Q, B) int32
     ``l = hash_bits - hamming`` (the eq.-12 input)."""
     impl = _resolve(impl, "bucket_match")
+    _require_nonempty("bucket_match", Q=q_codes.shape[0],
+                      B=bucket_codes.shape[0], W=q_codes.shape[1])
     _charge("bucket_match", _cost.packed_scan_cost, q_codes.shape[0],
             bucket_codes.shape[0], hash_bits)
     if impl == "ref":
@@ -186,6 +211,8 @@ def delta_scan(q_codes: jax.Array, delta_codes: jax.Array, live: jax.Array,
     ``l = hash_bits - hamming`` with dead slots (``live`` falsy) fused to
     ``-1`` — the streaming merge ranks them last in one pass."""
     impl = _resolve(impl, "delta_scan")
+    _require_nonempty("delta_scan", Q=q_codes.shape[0],
+                      C=delta_codes.shape[0], W=q_codes.shape[1])
     _charge("delta_scan", _cost.packed_scan_cost, q_codes.shape[0],
             delta_codes.shape[0], hash_bits)
     if impl == "ref":
@@ -207,6 +234,8 @@ def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
     first ``num_probe`` probed items, given per-query probe-ordered bucket
     runs as (cum (Q, S+1), starts (Q, S)) int32 arrays."""
     impl = _resolve(impl, "bucket_gather")
+    _require_nonempty("bucket_gather", Q=cum.shape[0],
+                      S=cum.shape[1] - 1, num_probe=num_probe)
     _charge("bucket_gather", _cost.segmented_gather_cost,
             cum.shape[0], num_probe)
     if impl == "ref":
@@ -226,3 +255,271 @@ def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
     out = bucket_gather_pallas(cum, starts, num_probe, bq=bq,
                                interpret=not _on_tpu())
     return out[:Q]
+
+
+# -- kernel registry (kernelcheck metadata, DESIGN.md §16) --------------------
+#
+# One entry per op above. The registry is what makes the ops *statically
+# analyzable*: repro/analysis/kernelcheck.py walks it to capture each
+# ``pallas_call`` under abstract tracing (grid, BlockSpecs, index maps),
+# evaluate the same cost model the op's ``_charge`` call bills, derive an
+# independent flop/byte count from the ref oracle's jaxpr, and drive the
+# K4 sentinel probes. Adding a kernel without registering it here is an R3
+# finding; registering it keeps it under the K1–K5 gate forever.
+
+
+def _arr(abstract: bool, shape: Tuple[int, ...], dtype):
+    """One registry input: ShapeDtypeStruct for abstract capture, a cheap
+    concrete zero array for jaxpr cost derivation."""
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def _codes(n: int, w: int) -> jax.Array:
+    """Deterministic uint32 code patterns for the K4 probes (Knuth
+    multiplicative hash of the slot index — no PRNG dependency)."""
+    i = jnp.arange(n * w, dtype=jnp.uint32)
+    return (i * jnp.uint32(2654435761) + jnp.uint32(12345)).reshape(n, w)
+
+
+def _parity_problems(op: str, got, want, *, atol: float = 0.0) -> List[str]:
+    """Pallas-vs-ref comparison under adversarial padding; any mismatch
+    means padded lanes leaked through the wrapper (the PR 4 bug class)."""
+    import numpy as np
+    g, w = np.asarray(got), np.asarray(want)
+    if g.shape != w.shape:
+        return [f"{op}: pallas result shape {g.shape} != ref {w.shape} "
+                f"under unaligned input shapes"]
+    if atol:
+        ok = bool(np.allclose(g, w, atol=atol, rtol=1e-5))
+    else:
+        ok = bool((g == w).all())
+    if not ok:
+        return [f"{op}: pallas/ref parity broke under padding "
+                f"(max abs diff {np.abs(g - w).max()})"]
+    return []
+
+
+def _probe_hash_encode() -> List[str]:
+    """Padding-bit discipline: with every projection positive, unmasked
+    padding bits of the last word would read sign(0) = 1."""
+    n, d, L = 3, 8, 48                       # L % 32 == 16 padding bits
+    x = jnp.ones((n, d), jnp.float32)
+    A = jnp.ones((d, L), jnp.float32)
+    got = hash_encode(x, A, impl="pallas")
+    want = _ref.hash_encode_ref(x, A)
+    problems = _parity_problems("hash_encode", got, want)
+    if bool(jnp.any(jnp.asarray(got)[:, -1] >> jnp.uint32(L % 32))):
+        problems.append(
+            "hash_encode: padding bits of the final packed word are not "
+            "masked to 0 (sign(0) leaked into the code)")
+    return problems
+
+
+def _probe_hamming() -> List[str]:
+    q, n, w = 3, 70, 2                       # n far below the 512 tile
+    return _parity_problems(
+        "hamming_scan",
+        hamming_scan(_codes(q, w), _codes(n, w), impl="pallas"),
+        _ref.hamming_ref(_codes(q, w), _codes(n, w)))
+
+
+def _probe_mips_topk() -> List[str]:
+    """The PR 4 shard-padding leak, distilled: all real scores strongly
+    negative, so an unmasked zero-padded item row (score 0) would win."""
+    q, n, d, k = 3, 5, 4, 5                  # k == n: every real id surfaces
+    queries = -3.0 * jnp.ones((q, d), jnp.float32)
+    items = 1.0 + jnp.arange(n * d, dtype=jnp.float32).reshape(n, d) / (n * d)
+    gv, gi = mips_topk(queries, items, k, impl="pallas")
+    wv, wi = _ref.mips_topk_ref(queries, items, k)
+    problems = []
+    if not bool(jnp.all(gi < n)):
+        problems.append(
+            "mips_topk: padded item ids surfaced in the returned top-k "
+            "(sentinel feature column not ranking padded rows last)")
+    problems += _parity_problems("mips_topk.ids", gi, wi)
+    problems += _parity_problems("mips_topk.vals", gv, wv, atol=1e-4)
+    return problems
+
+
+def _probe_bucket_match() -> List[str]:
+    q, b, w = 3, 21, 1                       # b far below the 512 tile
+    hash_bits = 32 * w
+    return _parity_problems(
+        "bucket_match",
+        bucket_match(_codes(q, w), _codes(b, w), hash_bits, impl="pallas"),
+        _ref.bucket_match_ref(_codes(q, w), _codes(b, w), hash_bits))
+
+
+def _probe_delta_scan() -> List[str]:
+    q, c, w = 3, 5, 1                        # c pads 5 -> 128 dead slots
+    hash_bits = 32 * w
+    live = jnp.asarray([True, False, True, False, True])
+    got = delta_scan(_codes(q, w), _codes(c, w), live, hash_bits,
+                     impl="pallas")
+    want = _ref.delta_scan_ref(_codes(q, w), _codes(c, w), live, hash_bits)
+    problems = _parity_problems("delta_scan", got, want)
+    dead = jnp.logical_not(live)
+    if not bool(jnp.all(jnp.where(dead[None, :], got == -1, True))):
+        problems.append("delta_scan: dead slots did not fuse to the -1 "
+                        "sentinel")
+    if not bool(jnp.all(jnp.where(live[None, :], got >= 0, True))):
+        problems.append("delta_scan: live slots carried the dead-slot "
+                        "sentinel")
+    return problems
+
+
+def _probe_bucket_gather() -> List[str]:
+    q, s, p = 3, 4, 7                        # q pads 3 -> 8 covering runs
+    sizes = jnp.full((q, s), 2, jnp.int32)   # 4 runs x 2 items >= p
+    cum = jnp.concatenate(
+        [jnp.zeros((q, 1), jnp.int32), jnp.cumsum(sizes, axis=1)], axis=1)
+    starts = (17 * jnp.arange(q * s, dtype=jnp.int32)).reshape(q, s)
+    return _parity_problems(
+        "bucket_gather",
+        bucket_gather(cum, starts, p, impl="pallas"),
+        _ref.bucket_gather_ref(cum, starts, p))
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredKernel:
+    """Registry metadata for one Pallas op (not jit-static — analysis
+    only, never enters a trace).
+
+    ``pallas_symbol`` names the jitted ``*_pallas`` builder in this
+    module's namespace so kernelcheck can unwrap it past ``jax.jit`` (a
+    cached executable would skip ``pallas_call`` and capture nothing).
+    ``make_inputs(shapes, abstract)`` builds wrapper inputs for one shape
+    class; ``cost_args(shapes)`` positions the same class for ``cost_fn``
+    — the *identical* model object the op's ``_charge`` call bills, which
+    is what lets K5 assert the attribution can't silently drift.
+    ``cost_tol`` is the per-op K5 factor tolerance between the analytic
+    model and the jaxpr-derived count (the analytic models charge
+    semantic work — one lane-op per popcount word — while the oracle
+    jaxpr pays bookkeeping like converts and binary-search steps);
+    ``bytes_tol`` overrides it for the hbm_bytes metric when the byte
+    models diverge differently than the flop models."""
+
+    op: str
+    wrapper: Callable
+    pallas_symbol: Optional[str]
+    annotation: KernelAnnotation
+    cost_fn: Callable
+    cost_args: Callable
+    ref_fn: Callable
+    make_inputs: Callable
+    shape_classes: Tuple[Dict[str, int], ...]
+    probe: Optional[Callable] = None
+    cost_tol: float = 5.0
+    bytes_tol: Optional[float] = None
+
+
+KERNEL_REGISTRY: Dict[str, RegisteredKernel] = {
+    "hash_encode": RegisteredKernel(
+        op="hash_encode",
+        wrapper=hash_encode,
+        pallas_symbol="hash_encode_pallas",
+        annotation=_hash_encode_mod.ANNOTATION,
+        cost_fn=_cost.hash_encode_cost,
+        cost_args=lambda s: (s["n"], s["d"], s["L"]),
+        ref_fn=_ref.hash_encode_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["n"], s["d"]), jnp.float32),
+             _arr(a, (s["d"], s["L"]), jnp.float32),
+             _arr(a, (s["n"],), jnp.float32),
+             _arr(a, (s["L"],), jnp.float32)), {}),
+        # second class drives a multi-slab K loop (d > bd): the revisit
+        # declaration on the k_slab grid dim is actually exercised
+        shape_classes=({"n": 256, "d": 96, "L": 64},
+                       {"n": 128, "d": 1024, "L": 128}),
+        probe=_probe_hash_encode,
+    ),
+    "hamming_scan": RegisteredKernel(
+        op="hamming_scan",
+        wrapper=hamming_scan,
+        pallas_symbol="hamming_pallas",
+        annotation=_hamming_mod.ANNOTATION,
+        cost_fn=_cost.packed_scan_cost,
+        cost_args=lambda s: (s["q"], s["n"], 32 * s["w"]),
+        ref_fn=_ref.hamming_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["w"]), jnp.uint32),
+             _arr(a, (s["n"], s["w"]), jnp.uint32)), {}),
+        shape_classes=({"q": 64, "n": 2048, "w": 2},
+                       {"q": 8, "n": 512, "w": 8}),
+        probe=_probe_hamming,
+    ),
+    "mips_topk": RegisteredKernel(
+        op="mips_topk",
+        wrapper=mips_topk,
+        pallas_symbol="mips_topk_pallas",
+        annotation=_mips_topk_mod.ANNOTATION,
+        cost_fn=_cost.mips_topk_cost,
+        cost_args=lambda s: (s["q"], s["n"], s["d"], s["k"]),
+        ref_fn=_ref.mips_topk_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["d"]), jnp.float32),
+             _arr(a, (s["n"], s["d"]), jnp.float32)), {"k": s["k"]}),
+        shape_classes=({"q": 8, "n": 1024, "d": 64, "k": 8},
+                       {"q": 16, "n": 512, "d": 128, "k": 16}),
+        probe=_probe_mips_topk,
+        # byte model charges gathered-candidate-row traffic (q*n*d reads,
+        # the hot-path realization); the streaming oracle reads each item
+        # row once -> ratio ~ q
+        bytes_tol=32.0,
+    ),
+    "bucket_match": RegisteredKernel(
+        op="bucket_match",
+        wrapper=bucket_match,
+        pallas_symbol="bucket_match_pallas",
+        annotation=_bucket_probe_mod.MATCH_ANNOTATION,
+        cost_fn=_cost.packed_scan_cost,
+        cost_args=lambda s: (s["q"], s["b"], 32 * s["w"]),
+        ref_fn=_ref.bucket_match_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["w"]), jnp.uint32),
+             _arr(a, (s["b"], s["w"]), jnp.uint32)),
+            {"hash_bits": 32 * s["w"]}),
+        shape_classes=({"q": 64, "b": 1024, "w": 2},),
+        probe=_probe_bucket_match,
+    ),
+    "delta_scan": RegisteredKernel(
+        op="delta_scan",
+        wrapper=delta_scan,
+        pallas_symbol="delta_scan_pallas",
+        annotation=_delta_scan_mod.ANNOTATION,
+        cost_fn=_cost.packed_scan_cost,
+        cost_args=lambda s: (s["q"], s["c"], 32 * s["w"]),
+        ref_fn=_ref.delta_scan_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["w"]), jnp.uint32),
+             _arr(a, (s["c"], s["w"]), jnp.uint32),
+             _arr(a, (s["c"],), jnp.bool_)),
+            {"hash_bits": 32 * s["w"]}),
+        shape_classes=({"q": 64, "c": 256, "w": 2},),
+        probe=_probe_delta_scan,
+        # the oracle additionally pays the liveness select per (q, c) lane
+        cost_tol=8.0,
+    ),
+    "bucket_gather": RegisteredKernel(
+        op="bucket_gather",
+        wrapper=bucket_gather,
+        pallas_symbol="bucket_gather_pallas",
+        annotation=_bucket_probe_mod.GATHER_ANNOTATION,
+        cost_fn=_cost.segmented_gather_cost,
+        cost_args=lambda s: (s["q"], s["p"]),
+        ref_fn=_ref.bucket_gather_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["s"] + 1), jnp.int32),
+             _arr(a, (s["q"], s["s"]), jnp.int32)),
+            {"num_probe": s["p"]}),
+        shape_classes=({"q": 32, "s": 16, "p": 64},),
+        probe=_probe_bucket_gather,
+        # the analytic model charges the semantic walk (one op per probed
+        # slot, q*p); the oracle's vmapped searchsorted pays the binary
+        # search, bounds selects and index arithmetic per slot (~50x at
+        # S=16) — tolerance covers the measured gap with headroom
+        cost_tol=96.0,
+    ),
+}

@@ -100,6 +100,14 @@ def top_k_cost(q: int, probe: float, k: int) -> Dict[str, float]:
             "hbm_bytes": float((F32 + WORD) * (q * probe + q * k))}
 
 
+def mips_topk_cost(q: int, n: int, d: int, k: int) -> Dict[str, float]:
+    """Composite exact-MIPS op (kernels/ops.py mips_topk): re-rank matmul
+    over all n items + streaming top-k — the model the op's ``_charge``
+    call and the kernelcheck K5 cross-check both evaluate."""
+    rr, tk = re_rank_cost(q, n, d), top_k_cost(q, n, k)
+    return {m: rr[m] + tk[m] for m in ("flops", "hbm_bytes")}
+
+
 def query_stage_costs(shape: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
     """Per-stage predicted {flops, hbm_bytes} for one served batch.
 

@@ -147,6 +147,47 @@ def test_r3_flags_no_oracle_reference(tmp_path):
     assert any("references no ref oracle" in f.message for f in found)
 
 
+def _registry_with_tests(tmp_path, test_body):
+    ops = tmp_path / "ops.py"
+    ref = tmp_path / "ref.py"
+    ops.write_text(textwrap.dedent(_OPS_OK))
+    ref.write_text(textwrap.dedent(_REF_OK))
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_kernels.py").write_text(textwrap.dedent(test_body))
+    return rules.check_kernel_registry(ops, ref, "kernels/ops.py",
+                                       tests_root=tests)
+
+
+def test_r3_flags_missing_interpret_parity_test(tmp_path):
+    found = _registry_with_tests(tmp_path, """
+        def test_something_else():
+            assert ops.hash_encode(x, impl="ref").shape
+    """)
+    assert _rules_of(found) == ["R3"]
+    assert "interpret-mode parity test" in found[0].message
+
+
+def test_r3_passes_with_interpret_parity_test(tmp_path):
+    found = _registry_with_tests(tmp_path, """
+        def test_hash_encode_matches_ref():
+            got = ops.hash_encode(x, impl="pallas")
+            assert got is not None
+    """)
+    assert found == []
+
+
+def test_r3_parity_sweep_skipped_without_tests_root(tmp_path):
+    # check_kernel_registry without tests_root (or with a missing dir)
+    # only runs the registration arms — fixture repos without a test
+    # tree stay analyzable
+    assert _registry(tmp_path, _OPS_OK, _REF_OK) == []
+    found = rules.check_kernel_registry(
+        tmp_path / "ops.py", tmp_path / "ref.py", "kernels/ops.py",
+        tests_root=tmp_path / "no_such_dir")
+    assert found == []
+
+
 # -- R4: jit-static dataclasses -----------------------------------------------
 
 

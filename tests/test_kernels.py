@@ -68,3 +68,86 @@ def test_mips_topk_k_exceeding_n_raises():
     for impl in ("ref", "pallas"):
         with pytest.raises(ValueError, match="must not exceed the item"):
             ops.mips_topk(queries, items, 5, impl=impl)
+
+
+# -- zero-size typed guards (DESIGN.md §16, K4 hardening) ---------------------
+# Every wrapper pads shapes up to tile multiples; a zero-size dimension
+# would silently round up to a phantom tile instead of failing. The
+# guard must fire on both dispatch arms, before any padding or tracing.
+
+_ZERO_CASES = [
+    ("hash_encode N=0", lambda impl: ops.hash_encode(
+        jnp.zeros((0, 8)), jnp.zeros((8, 16)), impl=impl)),
+    ("hash_encode L=0", lambda impl: ops.hash_encode(
+        jnp.zeros((4, 8)), jnp.zeros((8, 0)), impl=impl)),
+    ("hamming_scan Q=0", lambda impl: ops.hamming_scan(
+        jnp.zeros((0, 2), jnp.uint32), jnp.zeros((8, 2), jnp.uint32),
+        impl=impl)),
+    ("hamming_scan W=0", lambda impl: ops.hamming_scan(
+        jnp.zeros((4, 0), jnp.uint32), jnp.zeros((8, 0), jnp.uint32),
+        impl=impl)),
+    ("mips_topk N=0", lambda impl: ops.mips_topk(
+        jnp.ones((2, 4)), jnp.ones((0, 4)), 0, impl=impl)),
+    ("bucket_match B=0", lambda impl: ops.bucket_match(
+        jnp.zeros((4, 2), jnp.uint32), jnp.zeros((0, 2), jnp.uint32), 64,
+        impl=impl)),
+    ("delta_scan C=0", lambda impl: ops.delta_scan(
+        jnp.zeros((4, 2), jnp.uint32), jnp.zeros((0, 2), jnp.uint32),
+        jnp.zeros((0,), jnp.int32), 64, impl=impl)),
+    ("bucket_gather S=0", lambda impl: ops.bucket_gather(
+        jnp.zeros((4, 1), jnp.int32), jnp.zeros((4, 0), jnp.int32), 8,
+        impl=impl)),
+    ("bucket_gather num_probe=0", lambda impl: ops.bucket_gather(
+        jnp.zeros((4, 3), jnp.int32), jnp.zeros((4, 2), jnp.int32), 0,
+        impl=impl)),
+]
+
+
+@pytest.mark.parametrize("label,call", _ZERO_CASES,
+                         ids=[c[0] for c in _ZERO_CASES])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_zero_size_inputs_raise_typed_error(label, call, impl):
+    with pytest.raises(ValueError, match="zero-size input dimension"):
+        call(impl)
+
+
+def test_zero_size_guard_survives_jit_trace():
+    # the guard reads static shapes only, so it must also fire when the
+    # wrapper is traced (the engine calls these under jit)
+    with pytest.raises(ValueError, match="zero-size input dimension"):
+        jax.jit(lambda q, d: ops.hamming_scan(q, d, impl="ref"))(
+            jnp.zeros((0, 2), jnp.uint32), jnp.zeros((8, 2), jnp.uint32))
+
+
+# -- degenerate (sub-tile) shape regressions ----------------------------------
+# single-query, sub-block shapes: every padded lane the wrappers add must
+# be sliced or masked back out (the PR 4 shard-padding leak class).
+
+def test_hash_encode_single_row_subtile():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8))
+    A = jax.random.normal(jax.random.PRNGKey(1), (8, 48))
+    got = ops.hash_encode(x, A, impl="pallas")
+    want = ops.hash_encode(x, A, impl="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mips_topk_single_item_pool():
+    # N=1 < the item tile: padded rows carry the -1e30 sentinel and must
+    # never appear in the ids
+    queries = jax.random.normal(jax.random.PRNGKey(2), (3, 16)) - 2.0
+    items = jax.random.normal(jax.random.PRNGKey(3), (1, 16)) - 2.0
+    gv, gi = ops.mips_topk(queries, items, 1, impl="pallas")
+    wv, wi = ops.mips_topk(queries, items, 1, impl="ref")
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert (np.asarray(gi) == 0).all()
+
+
+def test_bucket_gather_single_query_single_run():
+    cum = jnp.asarray([[0, 9]], jnp.int32)
+    starts = jnp.asarray([[100]], jnp.int32)
+    got = ops.bucket_gather(cum, starts, 4, impl="pallas")
+    want = ops.bucket_gather(cum, starts, 4, impl="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray([[100, 101, 102, 103]]))
