@@ -1,0 +1,95 @@
+"""Staged vs fused single-pass query engine (DESIGN.md §17).
+
+Benchmarks the *end-to-end query* — candidate traversal + re-rank — which
+is what the fused kernel collapses into one dispatch: the staged relay
+pays the candidate materialization, the duplicate-mask sort and a full
+top-k over the probe width, while the fused path streams phase-1 scores
+into a k'-wide survivor buffer and rescores only the survivors. Three
+arms on the paper's long-tail profile at the short-code protocol:
+
+  * ``staged``     — bucket traversal -> rerank -> top_k (the PR 5 path);
+  * ``fused``      — one fused dispatch, f32 phase 1 (ids bit-identical
+                     to staged, parity-tested);
+  * ``fused_int8`` — quantized phase 1 + f32 rescore of k' survivors
+                     (recall delta bounded by the regression gate).
+
+Writes ``BENCH_<n>.json`` at the repo root; ``benchmarks/regress.py``
+gates the fused-over-staged speedup (direction-aware) and the int8
+recall delta on every recorded run.
+"""
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import bench_json_path, bench_smoke, emit, fmt, \
+    time_call
+from repro.core import topk
+from repro.core.bucket_index import build_bucket_index
+from repro.core.engine import QueryEngine
+from repro.core.index import IndexSpec, build
+from repro.data.synthetic import make_dataset
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+if bench_smoke():                    # CI canary: toy N
+    N, D, Q, K, P = 5_000, 32, 16, 10, 500
+else:
+    N, D, Q, K, P = 100_000, 32, 64, 10, 2000
+L, M = 16, 32                        # the paper's short-code protocol
+
+
+def bench_arm(name: str, eng: QueryEngine, ds, truth) -> dict:
+    query_fn = jax.jit(lambda q, e=eng: e.query(q, K, P))
+    # the fused-over-staged bound rides this number: median of 5 hot
+    # repeats after 2 warmups, or single-run jitter swamps the margin
+    us = time_call(lambda: query_fn(ds.queries), warmup=2, iters=5)
+    _, ids = query_fn(ds.queries)
+    rec = float(topk.recall_at(ids, truth))
+    qps = Q / (us / 1e6)
+    emit(f"fused_{name}", us,
+         f"qps={fmt(qps, 1)}|r@{K}={fmt(rec)}|N={N}|P={P}")
+    return {"us_per_batch": round(us, 1), "qps": round(qps, 1),
+            f"recall@{K}": round(rec, 4)}
+
+
+def main() -> None:
+    ds = make_dataset("imagenet", jax.random.PRNGKey(0), n=N, d=D,
+                      num_queries=Q)
+    spec = IndexSpec(family="simple", code_len=L, m=M, engine="bucket")
+    idx = build(spec, ds.items, jax.random.PRNGKey(1), strict=False)
+    buckets = build_bucket_index(idx)
+    _, truth = topk.exact_mips(ds.queries, ds.items, K)
+    out = {"bench": "fused", "n_items": N, "dim": D, "num_queries": Q,
+           "num_probe": P, "k": K, "code_len": L, "num_ranges": M,
+           "num_buckets": int(buckets.num_buckets),
+           "backend": jax.default_backend(), "arms": {}}
+    arms = {
+        "staged": QueryEngine(idx, engine="bucket", buckets=buckets),
+        "fused": QueryEngine(idx, engine="fused", buckets=buckets),
+        "fused_int8": QueryEngine(idx, engine="fused", buckets=buckets,
+                                  quantized=True),
+    }
+    for name, eng in arms.items():
+        out["arms"][name] = bench_arm(name, eng, ds, truth)
+    staged_us = out["arms"]["staged"]["us_per_batch"]
+    out["fused_speedup"] = round(
+        staged_us / out["arms"]["fused"]["us_per_batch"], 3)
+    out["int8_speedup"] = round(
+        staged_us / out["arms"]["fused_int8"]["us_per_batch"], 3)
+    out["int8_recall_delta"] = round(
+        out["arms"]["fused"][f"recall@{K}"]
+        - out["arms"]["fused_int8"][f"recall@{K}"], 4)
+    emit("fused_speedup", 0.0,
+         f"fused_over_staged={fmt(out['fused_speedup'], 2)}"
+         f"|int8={fmt(out['int8_speedup'], 2)}"
+         f"|int8_recall_delta={fmt(out['int8_recall_delta'])}")
+    path = bench_json_path(ROOT)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    emit("fused_bench_json", 0.0, os.path.basename(path))
+
+
+if __name__ == "__main__":
+    main()

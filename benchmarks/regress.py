@@ -78,6 +78,42 @@ def _extract_engine_compare(b: dict) -> tuple:
     return shape, metrics, bounds
 
 
+def _extract_fused(b: dict) -> tuple:
+    """Fused single-pass engine bench (benchmarks/fused_bench.py): the
+    fused-over-staged speedup is the tentpole metric (direction-aware);
+    the int8 arm's recall delta is an absolute contract bound at any
+    scale, and the end-to-end win itself is bounded at the full-scale
+    protocol (N >= 100k — toy indexes do not amortize the fusion)."""
+    shape = {k: b.get(k) for k in
+             ("n_items", "dim", "num_queries", "num_probe", "k",
+              "code_len", "num_ranges")}
+    k = b.get("k", 10)
+    metrics, bounds = {}, []
+    for name, arm in b.get("arms", {}).items():
+        metrics[f"{name}.qps"] = _m(arm["qps"], "higher", TOL_QPS)
+        metrics[f"{name}.recall"] = _m(arm[f"recall@{k}"], "higher",
+                                       TOL_RECALL)
+    metrics["fused_speedup"] = _m(b["fused_speedup"], "higher",
+                                  TOL_SPEEDUP)
+    metrics["int8_speedup"] = _m(b["int8_speedup"], "higher", TOL_SPEEDUP)
+    bounds.append(_bound(
+        "fused_parity",
+        b["arms"]["fused"][f"recall@{k}"]
+        == b["arms"]["staged"][f"recall@{k}"],
+        "fused f32 arm must retrieve identical recall to staged "
+        "(bit-identical ids)"))
+    bounds.append(_bound(
+        "int8_recall_delta",
+        b.get("int8_recall_delta", 1.0) <= TOL_RECALL,
+        f"int8 phase-1 recall delta must stay within {TOL_RECALL}"))
+    if b.get("n_items", 0) >= 100_000:
+        bounds.append(_bound(
+            "fused_beats_staged", b["fused_speedup"] > 1.0,
+            "the fused kernel must beat the staged relay end-to-end at "
+            "full scale"))
+    return shape, metrics, bounds
+
+
 def _extract_streaming(b: dict) -> tuple:
     shape = {k: b.get(k) for k in
              ("n_items", "dim", "num_queries", "num_probe", "k",
@@ -220,6 +256,7 @@ def _extract_kernelcheck(b: dict) -> tuple:
 
 EXTRACTORS = {
     "engine_compare": _extract_engine_compare,
+    "fused": _extract_fused,
     "streaming": _extract_streaming,
     "catalyst": _extract_catalyst,
     "distributed": _extract_distributed,

@@ -48,6 +48,9 @@ STAGE_KERNEL = {
     "repro.engine.segmented_gather": "bucket_gather",
     "repro.engine.re_rank": "mips_topk",
     "repro.engine.top_k": "mips_topk",
+    # the single-pass engine collapses gather/re_rank/top_k into one span
+    # backed by the fused kernel (DESIGN.md §17)
+    "repro.engine.fused_query": "fused_query",
 }
 
 

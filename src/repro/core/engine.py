@@ -31,6 +31,7 @@ integer-hash families (L2-ALSH) traverse buckets too.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -45,7 +46,7 @@ from repro.obs import cost
 from repro.obs.trace import span_or_null
 from repro.obs.tracker import resolve_tracker
 
-ENGINES = ("auto", "dense", "bucket")
+ENGINES = ("auto", "dense", "bucket", "fused")
 
 # engine="auto" break-even (BENCH_0001, N=100k CPU): at L=16 the directory
 # collapses items (B/N ~ 0.33) and bucket traversal is ~3x faster; at L=32
@@ -84,6 +85,50 @@ def _default_match(buckets: BucketIndex, impl: str):
         q_codes, codes, buckets.hash_bits, impl=impl)
 
 
+def _directory_order(buckets: BucketIndex, q_codes: jax.Array,
+                     match_fn, tracker) -> jax.Array:
+    """(Q, B) probe-ordered bucket indices: directory match -> per-bucket
+    rank -> stable argsort (ties break by CSR bucket position). The shared
+    front half of every bucket-store traversal (staged, planned, fused)."""
+    Q = q_codes.shape[0]
+    with span_or_null(tracker, "repro.engine.directory_match") as sp:
+        sp.set_attrs(**cost.directory_match_cost(
+            Q, buckets.num_buckets, buckets.hash_bits))
+        matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
+        bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
+        return sp.sync(
+            jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
+
+
+def _probe_runs(buckets: BucketIndex, order: jax.Array,
+                num_probe: int) -> Tuple[jax.Array, jax.Array]:
+    """(cum (Q, S+1), starts (Q, S)) CSR runs of the first ``num_probe``
+    probed items. Every bucket holds >= 1 item, so the first min(B, P)
+    buckets cover the budget."""
+    sel = order[:, :min(buckets.num_buckets, num_probe)]         # (Q, S)
+    sizes = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[sel]
+    starts = buckets.bucket_start[:-1][sel]
+    cum = jnp.concatenate(
+        [jnp.zeros((sel.shape[0], 1), jnp.int32),
+         jnp.cumsum(sizes, axis=-1, dtype=jnp.int32)],
+        axis=-1)                                                 # (Q, S+1)
+    return cum, starts
+
+
+def _planned_runs(buckets: BucketIndex, order: jax.Array,
+                  budgets: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+    """(cum (Q, B+1), starts (Q, B)) CSR runs realizing per-range budgets:
+    each probe-ordered bucket takes what is left of its range's budget
+    (zero-take buckets contribute empty runs)."""
+    sizes_o = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[order]
+    starts = buckets.bucket_start[:-1][order]
+    take = planned_take(buckets.bucket_rid[order], sizes_o, budgets)
+    cum = jnp.concatenate(
+        [jnp.zeros((order.shape[0], 1), jnp.int32),
+         jnp.cumsum(take, axis=-1, dtype=jnp.int32)], axis=-1)
+    return cum, starts
+
+
 def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
                       num_probe: int, *, impl: str = "auto",
                       match_fn=None, tracker=None) -> jax.Array:
@@ -105,24 +150,10 @@ def bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
     Q = q_codes.shape[0]
-    with span_or_null(tracker, "repro.engine.directory_match") as sp:
-        sp.set_attrs(**cost.directory_match_cost(
-            Q, buckets.num_buckets, buckets.hash_bits))
-        matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
-        bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
-        order = sp.sync(
-            jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
+    order = _directory_order(buckets, q_codes, match_fn, tracker)
     with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
         sp.set_attrs(**cost.segmented_gather_cost(Q, num_probe))
-        # every bucket holds >= 1 item, so the first min(B, P) buckets
-        # cover the budget.
-        sel = order[:, :min(buckets.num_buckets, num_probe)]     # (Q, S)
-        sizes = (buckets.bucket_start[1:] - buckets.bucket_start[:-1])[sel]
-        starts = buckets.bucket_start[:-1][sel]
-        cum = jnp.concatenate(
-            [jnp.zeros((sel.shape[0], 1), jnp.int32),
-             jnp.cumsum(sizes, axis=-1, dtype=jnp.int32)],
-            axis=-1)                                             # (Q, S+1)
+        cum, starts = _probe_runs(buckets, order, num_probe)
         csr_pos = ops.bucket_gather(cum, starts, num_probe, impl=impl)
         return sp.sync(buckets.item_ids[csr_pos])
 
@@ -145,11 +176,16 @@ def check_budgets(budgets: Sequence[int], range_counts: np.ndarray
 
 
 def bucket_range_counts(buckets: BucketIndex) -> np.ndarray:
-    """(R,) per-range item counts from the bucket directory (host)."""
+    """(R,) per-range item counts from the bucket directory (host).
+
+    device_get *before* any jnp op: inside a jit trace the directory
+    arrays are closed-over constants, and slicing them with jnp would
+    stage tracers that cannot come back to host.
+    """
+    start = np.asarray(jax.device_get(buckets.bucket_start))
     return np.bincount(
         np.asarray(jax.device_get(buckets.bucket_rid)),
-        weights=np.asarray(jax.device_get(
-            buckets.bucket_start[1:] - buckets.bucket_start[:-1])),
+        weights=(start[1:] - start[:-1]),
         minlength=buckets.rank.shape[0]).astype(np.int64)
 
 
@@ -201,27 +237,73 @@ def planned_bucket_candidates(buckets: BucketIndex, q_codes: jax.Array,
     if match_fn is None:
         match_fn = _default_match(buckets, impl)
     Q = q_codes.shape[0]
-    with span_or_null(tracker, "repro.engine.directory_match") as sp:
-        sp.set_attrs(**cost.directory_match_cost(
-            Q, buckets.num_buckets, buckets.hash_bits))
-        matches = match_fn(q_codes, buckets.bucket_code)         # (Q, B)
-        bucket_rank = buckets.rank[buckets.bucket_rid[None, :], matches]
-        order = sp.sync(
-            jnp.argsort(bucket_rank, axis=-1, stable=True))      # (Q, B)
+    order = _directory_order(buckets, q_codes, match_fn, tracker)
     with span_or_null(tracker, "repro.engine.segmented_gather") as sp:
         sp.set_attrs(**cost.segmented_gather_cost(Q, total))
-        sizes_o = (buckets.bucket_start[1:]
-                   - buckets.bucket_start[:-1])[order]
-        starts = buckets.bucket_start[:-1][order]
-        take = planned_take(buckets.bucket_rid[order], sizes_o, budgets)
         # every query's takes sum to exactly ``total`` (each range always
         # contributes its full effective budget), so no covering run is
         # needed
-        cum = jnp.concatenate(
-            [jnp.zeros((q_codes.shape[0], 1), jnp.int32),
-             jnp.cumsum(take, axis=-1, dtype=jnp.int32)], axis=-1)
+        cum, starts = _planned_runs(buckets, order, budgets)
         csr_pos = ops.bucket_gather(cum, starts, total, impl=impl)
         return sp.sync(buckets.item_ids[csr_pos])
+
+
+def fused_bucket_query(buckets: BucketIndex, q_codes: jax.Array,
+                       queries: jax.Array, items_csr: jax.Array, k: int, *,
+                       num_probe: Optional[int] = None,
+                       budgets: Optional[Sequence[int]] = None,
+                       payload: Optional[jax.Array] = None,
+                       scale: Optional[jax.Array] = None,
+                       impl: str = "auto", match_fn=None,
+                       range_counts: Optional[np.ndarray] = None,
+                       tracker=None) -> Tuple[jax.Array, jax.Array, int]:
+    """Single-pass fused traversal + re-rank (DESIGN.md §17): directory
+    match, then ONE kernel dispatch covering run expansion, phase-1
+    scoring, survivor selection and f32 rescore. Returns (vals, ids,
+    probed width). ``items_csr`` holds the item rows in CSR order
+    (``items[buckets.item_ids]``); optional ``payload``/``scale`` select
+    the int8 phase-1 arm. With the default f32 payload the returned ids
+    are bit-identical to the staged planned path (conformance-tested).
+    """
+    if (num_probe is None) == (budgets is None):
+        raise ValueError("pass exactly one of num_probe/budgets")
+    if match_fn is None:
+        match_fn = _default_match(buckets, impl)
+    if budgets is not None:
+        if range_counts is None:
+            range_counts = bucket_range_counts(buckets)
+        budgets, total = check_budgets(budgets, range_counts)
+    else:
+        total = int(num_probe)
+        if not 0 < total <= buckets.num_items:
+            raise ValueError(f"num_probe={total} outside "
+                             f"(0, N={buckets.num_items}]")
+    order = _directory_order(buckets, q_codes, match_fn, tracker)
+    with span_or_null(tracker, "repro.engine.fused_query") as sp:
+        sp.set_attrs(**cost.fused_query_cost(
+            q_codes.shape[0], total, queries.shape[1], int(k),
+            max(int(k), min(max(4 * int(k), 32), total))))
+        if budgets is not None:
+            cum, starts = _planned_runs(buckets, order, budgets)
+        else:
+            cum, starts = _probe_runs(buckets, order, total)
+        vals, pos = ops.fused_query(queries, cum, starts, items_csr,
+                                    total, k, payload=payload,
+                                    scale=scale, impl=impl)
+        ids = sp.sync(buckets.item_ids[pos])
+    return vals, ids, total
+
+
+def quantize_payload(items_csr: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-item int8 quantization of the CSR payload: returns
+    (payload (N, d) int8, scale (N, 1) f32) with
+    ``rows ~= payload * scale`` and scale = max|row| / 127."""
+    mx = jnp.max(jnp.abs(items_csr), axis=1, keepdims=True)
+    scale = jnp.maximum(mx, jnp.finfo(jnp.float32).tiny) / 127.0
+    payload = jnp.clip(jnp.round(items_csr / scale), -127, 127
+                       ).astype(jnp.int8)
+    return payload, scale.astype(jnp.float32)
 
 
 def planned_dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
@@ -289,22 +371,27 @@ def dense_candidates(buckets: BucketIndex, q_codes: jax.Array,
         return sp.sync(buckets.item_ids[order[:, :num_probe]])
 
 
-# one-slot engine memo for the convenience surface (ComposedIndex.query /
+# bounded LRU engine memo for the convenience surface (ComposedIndex.query /
 # candidates dispatch): repeat calls over the same index reuse the host-built
 # bucket store instead of paying the O(N log N) rebuild per call — the
 # recall-contract default path goes through here every query. The entry
 # holds a strong ref to the index, so the id() key can't be a stale reuse
-# (same pattern as distributed._shim_engine).
-_engine_memo: dict = {}
+# (same pattern as distributed._shim_engine). The cap bounds the memo under
+# per-request trackers in a serving loop (each request resolving a fresh
+# tracker used to grow the memo without bound — PR 10 bugfix); the
+# ``repro.engine.memo_size`` gauge makes the occupancy observable.
+_ENGINE_MEMO_CAP = 8
+_engine_memo: OrderedDict = OrderedDict()
 
 
 def engine_for(index, *, engine: str, buckets=None,
                impl: str = "auto", tracker=None) -> "QueryEngine":
-    """A :class:`QueryEngine` over ``index``, memoized one-slot when no
-    prebuilt ``buckets`` are supplied. The memo key includes the tracker
-    identity (the entry holds strong refs, so id() keys cannot alias
-    collected objects); the ambient default tracker is resolved *here* so
-    installing one redirects even already-memoized convenience paths."""
+    """A :class:`QueryEngine` over ``index``, memoized in a bounded LRU
+    when no prebuilt ``buckets`` are supplied. The memo key includes the
+    tracker identity (the entry holds strong refs, so id() keys cannot
+    alias collected objects); the ambient default tracker is resolved
+    *here* so installing one redirects even already-memoized convenience
+    paths."""
     tracker = resolve_tracker(tracker)
     if buckets is not None:
         return QueryEngine(index, engine=engine, buckets=buckets,
@@ -313,10 +400,15 @@ def engine_for(index, *, engine: str, buckets=None,
     ent = _engine_memo.get(key)
     if ent is None:
         eng = QueryEngine(index, engine=engine, impl=impl, tracker=tracker)
-        _engine_memo.clear()
         _engine_memo[key] = (index, tracker, eng)
-        return eng
-    return ent[-1]
+        while len(_engine_memo) > _ENGINE_MEMO_CAP:
+            _engine_memo.popitem(last=False)
+    else:
+        _engine_memo.move_to_end(key)
+        eng = ent[-1]
+    if tracker is not None:
+        tracker.gauge("repro.engine.memo_size", len(_engine_memo))
+    return eng
 
 
 class QueryEngine:
@@ -325,14 +417,20 @@ class QueryEngine:
     Args:
       index:   spec-built ComposedIndex (any family, DESIGN.md §10) or a
                legacy RangeLSHIndex / SimpleLSHIndex / VocabIndex.
-      engine:  "dense" | "bucket" | "auto" (:func:`select_engine` picks by
-               directory size vs item count). Both engines need the store
-               (dense uses its rank table + CSR tie-break layout), so
-               construction always has one.
+      engine:  "dense" | "bucket" | "fused" | "auto" (:func:`select_engine`
+               picks dense/bucket by directory size vs item count; "fused"
+               — the single-pass kernel, DESIGN.md §17 — is opt-in because
+               it requires the item payload resident per shard). All
+               engines need the store (dense uses its rank table + CSR
+               tie-break layout), so construction always has one.
       buckets: optional prebuilt BucketIndex; when None, one is built
                here — a host-side O(N log N) one-time cost, so reuse the
                engine (or pass ``buckets``) across query batches.
       impl:    kernel dispatch ("auto" | "pallas" | "ref").
+      quantized: fused engine only — score phase 1 against the int8
+               payload (per-item scales) instead of the f32 rows; the
+               f32 rescore of the k' survivors bounds the recall delta
+               (conformance-tested).
       tracker: optional :class:`repro.obs.Tracker`; None falls back to the
                ambient default (resolved once, at construction). Attaching
                one adds stage spans + query counters, all recorded
@@ -342,9 +440,12 @@ class QueryEngine:
 
     def __init__(self, index, *, engine: str = "auto",
                  buckets: Optional[BucketIndex] = None, impl: str = "auto",
-                 tracker=None):
+                 tracker=None, quantized: bool = False):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine: {engine!r}")
+        if quantized and engine != "fused":
+            raise ValueError("quantized phase-1 scoring is a fused-engine "
+                             "arm; pass engine=\"fused\"")
         if buckets is None:
             buckets = build_bucket_index(index)
         if engine == "auto":
@@ -353,8 +454,25 @@ class QueryEngine:
         self.engine = engine
         self.buckets = buckets
         self.impl = impl
+        self.quantized = quantized
         self.tracker = resolve_tracker(tracker)
         self._range_counts_cache = None
+        self._fused_cache = None
+
+    @property
+    def _fused_arrays(self):
+        """(items_csr, payload, scale) for the fused kernel — item rows
+        reordered to CSR layout once per engine (device-resident), plus
+        the int8 payload + per-item scales when ``quantized``."""
+        if self._fused_cache is None:
+            items_csr = jnp.take(
+                self.index.items.astype(jnp.float32),
+                self.buckets.item_ids, axis=0)
+            payload = scale = None
+            if self.quantized:
+                payload, scale = quantize_payload(items_csr)
+            self._fused_cache = (items_csr, payload, scale)
+        return self._fused_cache
 
     @property
     def _range_id(self) -> jax.Array:
@@ -397,7 +515,10 @@ class QueryEngine:
             q_codes = sp.sync(
                 encode_queries(self.index, queries, impl=self.impl))
         if budgets is not None:
-            if self.engine == "bucket":
+            if self.engine in ("bucket", "fused"):
+                # the fused engine's candidate *set* is the bucket
+                # traversal's (the kernel only fuses scoring onto it), so
+                # candidate-level callers get the staged walk
                 return planned_bucket_candidates(
                     self.buckets, q_codes, budgets, impl=self.impl,
                     match_fn=self._match_fn,
@@ -410,7 +531,7 @@ class QueryEngine:
         if not 0 < num_probe <= self.buckets.num_items:
             raise ValueError(f"num_probe={num_probe} outside "
                              f"(0, N={self.buckets.num_items}]")
-        if self.engine == "bucket":
+        if self.engine in ("bucket", "fused"):
             return bucket_candidates(self.buckets, q_codes, num_probe,
                                      impl=self.impl,
                                      match_fn=self._match_fn, tracker=tr)
@@ -438,15 +559,35 @@ class QueryEngine:
                 k=k).budgets
         tr = self.tracker
         with span_or_null(tr, "repro.engine.query"):
-            cand = self.candidates(queries, num_probe, budgets=budgets)
-            if not 0 < int(k) <= cand.shape[1]:
-                raise ValueError(f"k={k} outside (0, probed width "
-                                 f"{cand.shape[1]}]")
-            vals, ids = rerank(queries, self.index.items, cand, int(k),
-                               tracker=tr)
+            if self.engine == "fused":
+                if (num_probe is None) == (budgets is None):
+                    raise ValueError("pass exactly one of "
+                                     "num_probe/budgets")
+                with span_or_null(tr, "repro.engine.hash_encode") as sp:
+                    sp.set_attrs(**cost.hash_encode_cost(
+                        queries.shape[0], queries.shape[1],
+                        getattr(self.index, "code_len",
+                                self.buckets.hash_bits)))
+                    q_codes = sp.sync(encode_queries(
+                        self.index, queries, impl=self.impl))
+                items_csr, payload, scale = self._fused_arrays
+                vals, ids, width = fused_bucket_query(
+                    self.buckets, q_codes, queries, items_csr, int(k),
+                    num_probe=num_probe, budgets=budgets,
+                    payload=payload, scale=scale, impl=self.impl,
+                    match_fn=self._match_fn,
+                    range_counts=self._range_counts, tracker=tr)
+            else:
+                cand = self.candidates(queries, num_probe, budgets=budgets)
+                if not 0 < int(k) <= cand.shape[1]:
+                    raise ValueError(f"k={k} outside (0, probed width "
+                                     f"{cand.shape[1]}]")
+                vals, ids = rerank(queries, self.index.items, cand, int(k),
+                                   tracker=tr)
+                width = cand.shape[1]
         if tr is not None:
             tr.count("repro.engine.queries", queries.shape[0])
-            tr.observe("repro.engine.probe_width", cand.shape[1])
+            tr.observe("repro.engine.probe_width", width)
             if budgets is not None:
                 for j, b in enumerate(budgets):
                     tr.observe(f"repro.engine.probes_used.range{j}", b)

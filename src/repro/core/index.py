@@ -48,7 +48,7 @@ from repro.core.probe import DEFAULT_EPS
 from repro.core.topk import rerank
 
 SCHEMES = ("percentile", "uniform")
-ENGINES = ("auto", "dense", "bucket")
+ENGINES = ("auto", "dense", "bucket", "fused")
 IMPLS = ("auto", "pallas", "ref")
 
 
@@ -163,7 +163,7 @@ class IndexSpec:
                              f"got {self.num_tables}")
         if not 0.0 <= self.eps < 1.0:
             raise ValueError(f"eps must be in [0, 1), got {self.eps}")
-        if self.num_tables > 1 and self.engine == "bucket":
+        if self.num_tables > 1 and self.engine in ("bucket", "fused"):
             raise ValueError("multi-table single-probe has no bucket "
                              "store; use engine='dense'")
         if self.recall_target is not None:
@@ -335,6 +335,14 @@ class ComposedIndex(NamedTuple):
                     "pass num_probe, budgets or recall_target (or build "
                     "from an IndexSpec with a recall_target)")
             num_probe = _check_probe(num_probe, k, self.items.shape[0])
+        engine = self.spec.engine if engine is None else engine
+        if engine == "fused":
+            # single-pass kernel: traversal + scoring fuse, so the staged
+            # candidates->rerank relay below never materializes (Q, P)
+            from repro.core.engine import engine_for
+            eng = engine_for(self, engine=engine, buckets=buckets,
+                             impl=self.spec.impl, tracker=self.spec.tracker)
+            return eng.query(queries, int(k), num_probe, budgets=budgets)
         cand = self.candidates(queries, num_probe, engine=engine,
                                buckets=buckets, budgets=budgets)
         if not 0 < int(k) <= cand.shape[1]:

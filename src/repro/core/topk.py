@@ -22,10 +22,14 @@ def rerank(queries: jax.Array, items: jax.Array, cand_ids: jax.Array, k: int,
            *, tracker=None) -> Tuple[jax.Array, jax.Array]:
     """Exact re-rank of per-query candidates.
 
-    ``cand_ids``: (Q, P) item indices (may repeat). Returns top-k values and
-    *item* ids (Q, k) by true inner product. ``tracker`` adds re_rank/top_k
-    stage spans (host-side sync points — only pass one from eager callers,
-    never from inside jitted code).
+    ``cand_ids``: (Q, P) item indices (may repeat — bucket padding/fill
+    duplicates). Repeated ids are masked down to their first occurrence
+    before the top-k, so one item can never claim two result slots (the
+    exact_mips oracle scores each item once; unmasked repeats silently
+    diverged from it). Returns top-k values and *item* ids (Q, k) by true
+    inner product. ``tracker`` adds re_rank/top_k stage spans (host-side
+    sync points — only pass one from eager callers, never from inside
+    jitted code).
     """
     Q, P = cand_ids.shape
     with span_or_null(tracker, "repro.engine.re_rank") as sp:
@@ -34,6 +38,17 @@ def rerank(queries: jax.Array, items: jax.Array, cand_ids: jax.Array, k: int,
         scores = sp.sync(jnp.einsum("qd,qpd->qp", queries, cand))
     with span_or_null(tracker, "repro.engine.top_k") as sp:
         sp.set_attrs(**cost.top_k_cost(Q, P, k))
+        # first-occurrence duplicate mask without the (Q, P, P) blowup:
+        # stable-sort ids per row, flag equal neighbors, scatter back.
+        # Unique rows (every engine path) are left bit-identical.
+        order = jnp.argsort(cand_ids, axis=1, stable=True)
+        sorted_ids = jnp.take_along_axis(cand_ids, order, axis=1)
+        dup_sorted = jnp.concatenate(
+            [jnp.zeros((Q, 1), jnp.bool_),
+             sorted_ids[:, 1:] == sorted_ids[:, :-1]], axis=1)
+        dup = jnp.zeros_like(dup_sorted).at[
+            jnp.arange(Q)[:, None], order].set(dup_sorted)
+        scores = jnp.where(dup, jnp.finfo(scores.dtype).min, scores)
         vals, pos = jax.lax.top_k(scores, k)
         ids = sp.sync(jnp.take_along_axis(cand_ids, pos, axis=1))
     return vals, ids

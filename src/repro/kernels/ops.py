@@ -24,6 +24,7 @@ from repro.kernels import ref as _ref
 from repro.obs import cost as _cost
 from repro.kernels import bucket_probe as _bucket_probe_mod
 from repro.kernels import delta_scan as _delta_scan_mod
+from repro.kernels import fused_query as _fused_query_mod
 from repro.kernels import hamming as _hamming_mod
 from repro.kernels import hash_encode as _hash_encode_mod
 from repro.kernels import mips_topk as _mips_topk_mod
@@ -31,6 +32,7 @@ from repro.kernels.annotations import KernelAnnotation
 from repro.kernels.bucket_probe import (bucket_gather_pallas,
                                         bucket_match_pallas)
 from repro.kernels.delta_scan import delta_scan_pallas
+from repro.kernels.fused_query import fused_query_pallas
 from repro.kernels.hamming import hamming_pallas
 from repro.kernels.hash_encode import hash_encode_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
@@ -148,6 +150,9 @@ def hamming_scan(q_codes: jax.Array, db_codes: jax.Array, *,
         return _ref.hamming_ref(q_codes, db_codes)
     bq, bn = 64, 512
     Q, N = q_codes.shape[0], db_codes.shape[0]
+    # zero-padded rows alias code 0 (a REAL code) but only land in rows /
+    # columns past (Q, N), which the slice removes — no sentinel needed
+    # (pad-site audit, PR 10; K4 probes the unaligned shapes).
     qp = _pad_to(q_codes, 0, bq)
     dp = _pad_to(db_codes, 0, bn)
     out = hamming_pallas(qp, dp, bq=bq, bn=bn, interpret=not _on_tpu())
@@ -198,6 +203,8 @@ def bucket_match(q_codes: jax.Array, bucket_codes: jax.Array,
         return _ref.bucket_match_ref(q_codes, bucket_codes, hash_bits)
     bq, bb = 64, 512
     Q, B = q_codes.shape[0], bucket_codes.shape[0]
+    # zero-padded directory rows alias bucket code 0; their match counts
+    # only occupy columns >= B, removed by the slice (pad-site audit).
     qp = _pad_to(q_codes, 0, bq)
     bp = _pad_to(bucket_codes, 0, bb)
     out = bucket_match_pallas(qp, bp, hash_bits=hash_bits, bq=bq, bb=bb,
@@ -221,7 +228,8 @@ def delta_scan(q_codes: jax.Array, delta_codes: jax.Array, live: jax.Array,
     Q, C = q_codes.shape[0], delta_codes.shape[0]
     qp = _pad_to(q_codes, 0, bq)
     dp = _pad_to(delta_codes, 0, bc)
-    # padded slots carry live=0 and come back as -1; sliced off anyway.
+    # padded slots carry live=0 and come back as -1 (the declared dead-slot
+    # sentinel, NOT an aliased match count); sliced off anyway.
     lp = _pad_to(live.astype(jnp.int32)[None, :], 1, bc)
     out = delta_scan_pallas(qp, dp, lp, hash_bits=hash_bits, bq=bq, bc=bc,
                             interpret=not _on_tpu())
@@ -255,6 +263,68 @@ def bucket_gather(cum: jax.Array, starts: jax.Array, num_probe: int, *,
     out = bucket_gather_pallas(cum, starts, num_probe, bq=bq,
                                interpret=not _on_tpu())
     return out[:Q]
+
+
+def fused_query(queries: jax.Array, cum: jax.Array, starts: jax.Array,
+                items: jax.Array, total: int, k: int, *,
+                kprime: Optional[int] = None,
+                payload: Optional[jax.Array] = None,
+                scale: Optional[jax.Array] = None,
+                impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Fused single-pass planned query: vals (Q, k) f32, CSR positions
+    (Q, k) i32 (DESIGN.md §17).
+
+    ``cum`` (Q, S+1) / ``starts`` (Q, S): probe-ordered take runs whose
+    per-query sizes sum to the static planned width ``total`` (the
+    planner contract). ``items`` (N, d): f32 CSR-ordered rows (the
+    rescore payload). Optional ``payload`` (N, d) int8 + ``scale`` (N, 1)
+    f32 select the quantized phase-1 arm; by default phase 1 scores the
+    f32 rows themselves (unit scales), which makes the returned positions
+    bit-identical to the staged gather -> re-rank -> top_k relay.
+    ``kprime`` is the phase-1 survivor width (>= k; default
+    ``min(max(4k, 32), total)``).
+    """
+    impl = _resolve(impl, "fused_query")
+    Q, d = queries.shape
+    S = cum.shape[1] - 1
+    N = items.shape[0]
+    total = int(total)
+    k = int(k)
+    _require_nonempty("fused_query", Q=Q, d=d, S=S, N=N, k=k, total=total)
+    if k > total:
+        raise ValueError(f"k={k} must not exceed the planned probe "
+                         f"width total={total}")
+    if kprime is None:
+        kprime = max(k, min(max(4 * k, 32), total))
+    kprime = int(kprime)
+    if kprime < k:
+        raise ValueError(f"kprime={kprime} must be >= k={k}")
+    if (payload is None) != (scale is None):
+        raise ValueError("fused_query: pass payload and scale together "
+                         "(the per-item dequant scales)")
+    _charge("fused_query", _cost.fused_query_cost, Q, total, d, k, kprime)
+    if impl == "ref":
+        return _ref.fused_query_ref(queries, cum, starts, items, total, k,
+                                    kprime=kprime, payload=payload,
+                                    scale=scale)
+    if payload is None:
+        payload = items
+        scale = jnp.ones((N, 1), jnp.float32)
+    bq = 8
+    # padded query rows carry all-zero cum rows: a zero take total masks
+    # every candidate slot to the NEG sentinel inside the kernel.
+    pad = (-Q) % bq
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((pad, d), queries.dtype)], axis=0)
+        cum = jnp.concatenate(
+            [cum, jnp.zeros((pad, S + 1), cum.dtype)], axis=0)
+        starts = jnp.concatenate(
+            [starts, jnp.zeros((pad, S), starts.dtype)], axis=0)
+    vals, pos = fused_query_pallas(queries, cum, starts, payload, scale,
+                                   items, k, kprime=kprime, total=total,
+                                   bq=bq, interpret=not _on_tpu())
+    return vals[:Q, :k], pos[:Q, :k]
 
 
 # -- kernel registry (kernelcheck metadata, DESIGN.md §16) --------------------
@@ -376,10 +446,58 @@ def _probe_bucket_gather() -> List[str]:
     cum = jnp.concatenate(
         [jnp.zeros((q, 1), jnp.int32), jnp.cumsum(sizes, axis=1)], axis=1)
     starts = (17 * jnp.arange(q * s, dtype=jnp.int32)).reshape(q, s)
-    return _parity_problems(
+    problems = _parity_problems(
         "bucket_gather",
         bucket_gather(cum, starts, p, impl="pallas"),
         _ref.bucket_gather_ref(cum, starts, p))
+    # row-padding audit (PR 10): the wrapper's covering run [0, num_probe)
+    # keeps the 5 padded query rows in-contract; CSR position 0 is a REAL
+    # position, so any padded row leaking into the sliced result would
+    # alias item 0 — assert the slice boundary, not just parity.
+    got = bucket_gather(cum, starts, p, impl="pallas")
+    if got.shape != (q, p):
+        problems.append(
+            "bucket_gather: padded query rows leaked through the result "
+            "slice (covering-run rows alias CSR position 0)")
+    return problems
+
+
+def _probe_fused_query() -> List[str]:
+    """Chunk-padding leak, distilled: total=4 probed slots in a bp=128
+    chunk leaves 124 padded slots per query, and Q=3 pads to bq=8 with 5
+    all-zero cum rows. Item row 0 dominates every real candidate and CSR
+    position 0 is *not* probed — an unmasked padded slot (safe-gathered
+    row 0) would win every query."""
+    q, s, n, d, k = 3, 2, 8, 4, 4
+    queries = jnp.ones((q, d), jnp.float32)
+    items = jnp.arange(n * d, dtype=jnp.float32).reshape(n, d) / (n * d)
+    items = items.at[0].set(100.0)           # the poison row, never probed
+    cum = jnp.tile(jnp.asarray([[0, 2, 4]], jnp.int32), (q, 1))
+    starts = jnp.asarray([[2, 6], [4, 1], [6, 3]], jnp.int32)
+    total = 4
+    gv, gp = fused_query(queries, cum, starts, items, total, k,
+                         impl="pallas")
+    wv, wp = _ref.fused_query_ref(queries, cum, starts, items, total, k)
+    problems = []
+    if bool(jnp.any(gp == 0)):
+        problems.append(
+            "fused_query: an unprobed CSR position surfaced in the "
+            "returned top-k (padded candidate slots not masked to the "
+            "NEG sentinel before the merge)")
+    problems += _parity_problems("fused_query.pos", gp, wp)
+    problems += _parity_problems("fused_query.vals", gv, wv, atol=1e-4)
+    # int8 arm: per-item scales must ride the gather — uniform rows with
+    # wildly different scales surface any payload/scale misalignment.
+    pay = jnp.ones((n, d), jnp.int8)
+    sc = (2.0 ** jnp.arange(n, dtype=jnp.float32))[:, None] / 127.0
+    gv8, gp8 = fused_query(queries, cum, starts, items, total, k,
+                           payload=pay, scale=sc, impl="pallas")
+    wv8, wp8 = _ref.fused_query_ref(queries, cum, starts, items, total, k,
+                                    payload=pay, scale=sc)
+    problems += _parity_problems("fused_query.int8.pos", gp8, wp8)
+    problems += _parity_problems("fused_query.int8.vals", gv8, wv8,
+                                 atol=1e-4)
+    return problems
 
 
 @dataclasses.dataclass(frozen=True)
@@ -521,5 +639,36 @@ KERNEL_REGISTRY: Dict[str, RegisteredKernel] = {
         # search, bounds selects and index arithmetic per slot (~50x at
         # S=16) — tolerance covers the measured gap with headroom
         cost_tol=96.0,
+    ),
+    "fused_query": RegisteredKernel(
+        op="fused_query",
+        wrapper=fused_query,
+        pallas_symbol="fused_query_pallas",
+        annotation=_fused_query_mod.ANNOTATION,
+        cost_fn=_cost.fused_query_cost,
+        cost_args=lambda s: (s["q"], s["total"], s["d"], s["k"],
+                             s["kprime"]),
+        ref_fn=_ref.fused_query_ref,
+        make_inputs=lambda s, a: (
+            (_arr(a, (s["q"], s["d"]), jnp.float32),
+             _arr(a, (s["q"], s["s"] + 1), jnp.int32),
+             _arr(a, (s["q"], s["s"]), jnp.int32),
+             _arr(a, (s["n"], s["d"]), jnp.float32)),
+            {"total": s["total"], "k": s["k"], "kprime": s["kprime"]}),
+        # class B is the VMEM-residency envelope: payload/scale/items are
+        # whole-array resident, so N*d is bounded by half the VMEM budget
+        # (DESIGN.md §17) — shards beyond it go to the distributed engine
+        shape_classes=(
+            {"q": 16, "s": 8, "total": 256, "n": 4096, "d": 32,
+             "k": 8, "kprime": 32},
+            {"q": 8, "s": 16, "total": 1024, "n": 16384, "d": 32,
+             "k": 16, "kprime": 64}),
+        probe=_probe_fused_query,
+        # the analytic walk charge is q*total vs the oracle's vmapped
+        # searchsorted (the bucket_gather gap, diluted here by the dot
+        # flops); the byte model charges int8 candidate-row traffic while
+        # the oracle jaxpr pays whole-operand f32 reads
+        cost_tol=8.0,
+        bytes_tol=16.0,
     ),
 }

@@ -63,6 +63,46 @@ def delta_scan_ref(q_codes: jax.Array, delta_codes: jax.Array,
     return jnp.where(live[None, :].astype(jnp.int32) > 0, matches, -1)
 
 
+def fused_query_ref(queries: jax.Array, cum: jax.Array, starts: jax.Array,
+                    items: jax.Array, total: int, k: int, *,
+                    kprime: Optional[int] = None,
+                    payload: Optional[jax.Array] = None,
+                    scale: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused single-pass query kernel (DESIGN.md §17).
+
+    Staged realization of the same contract: CSR run expansion
+    (:func:`bucket_gather_ref`) -> dequantized phase-1 scores -> top-k'
+    survivors -> f32 rescore -> top-k. Returns vals (Q, k) f32 and CSR
+    positions (Q, k) i32. With an f32 payload (``payload=None``) the
+    phase-1 and rescore scores are the same dots, so the emitted
+    positions are bit-identical to ``lax.top_k`` over the full staged
+    candidate scores.
+    """
+    NEG = -3e38
+    if kprime is None:
+        kprime = max(k, min(max(4 * k, 32), total))
+    if payload is None:
+        payload = items
+        scale = jnp.ones((items.shape[0], 1), jnp.float32)
+    pos = bucket_gather_ref(cum, starts, total)             # (Q, total)
+    valid = jnp.arange(total, dtype=jnp.int32)[None, :] < cum[:, -1:]
+    # dequantize the gathered rows, not the whole payload (total << N on
+    # the planned path), in the kernel's op order: row * scale, then dot
+    deq = payload[pos].astype(jnp.float32) * scale[pos][..., 0][..., None]
+    s1 = jnp.einsum("qd,qpd->qp", queries.astype(jnp.float32), deq)
+    s1 = jnp.where(valid, s1, NEG)
+    kp = min(int(kprime), total)
+    sv, si = jax.lax.top_k(s1, kp)
+    spos = jnp.take_along_axis(pos, si, axis=1)             # (Q, kp)
+    ok = jnp.take_along_axis(valid, si, axis=1)
+    rescored = jnp.einsum("qd,qpd->qp", queries.astype(jnp.float32),
+                          items.astype(jnp.float32)[spos])
+    rescored = jnp.where(ok, rescored, NEG)
+    fv, fi = jax.lax.top_k(rescored, k)
+    return fv, jnp.take_along_axis(spos, fi, axis=1).astype(jnp.int32)
+
+
 def bucket_gather_ref(cum: jax.Array, starts: jax.Array,
                       num_probe: int) -> jax.Array:
     """Oracle for the segmented candidate gather: CSR position of the p-th

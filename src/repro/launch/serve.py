@@ -29,7 +29,7 @@ A host-side token map carries inserted rows back to embeddable token ids
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +154,24 @@ def bucket_arrays(buckets) -> Dict[str, jax.Array]:
                 bucket_code=buckets.bucket_code, rank=buckets.rank)
 
 
+class _FusedVocabHead(NamedTuple):
+    """A :class:`repro.models.lm_head.VocabIndex` plus the resident item
+    payload — the legacy-index surface the fused query engine needs:
+    ``A`` for query encoding, ``range_id``/``upper``/``hash_bits``/``eps``
+    for the bucket store, ``items`` (the unembedding columns) for the
+    single-pass kernel's phase-1 scoring (DESIGN.md §17)."""
+
+    items: jax.Array
+    codes: jax.Array
+    range_id: jax.Array
+    upper: jax.Array
+    A: jax.Array
+    code_len: int
+    hash_bits: int
+    eps: float
+    calib: Optional[Any] = None
+
+
 def build_sharded_vocab_index(unembed: jax.Array, key: jax.Array, *,
                               num_shards: int, spec=None,
                               code_len: int = 64, num_ranges: int = 16,
@@ -243,6 +261,7 @@ class BatchedServer:
                  lsh_decode: bool = False,
                  vocab_index: Optional[Any] = None,
                  num_probe: int = 1024, engine: str = "dense",
+                 quantized: bool = False,
                  streaming_index: Optional[Any] = None,
                  sharded_index: Optional[Any] = None,
                  token_map=None,
@@ -253,6 +272,7 @@ class BatchedServer:
         self.mesh = mesh
         self.max_seq = max_seq
         self.batch = batch
+        self._fused_eng = None
         self.tracker = resolve_tracker(tracker)
         if streaming_index is not None and self.tracker is not None \
                 and streaming_index.tracker is None:
@@ -345,6 +365,33 @@ class BatchedServer:
             self.decode_fn = make_decode_step(cfg, mesh, return_hidden=True)
             return
         lsh_decode = self.lsh_decode
+        if lsh_decode and engine == "fused":
+            # single-pass LSH head (DESIGN.md §17): the jitted step returns
+            # the hidden state and the fused traversal+rescore kernel runs
+            # host-dispatched per token — like the streaming/sharded heads,
+            # the head stays outside the model step. ``quantized`` scores
+            # phase 1 against the int8 vocab payload.
+            if vocab_index is None:
+                raise ValueError("engine='fused' needs a vocab_index")
+            from repro.core.engine import QueryEngine
+            unembed = (params["embed"].T if cfg.tie_embeddings
+                       else params["unembed"])
+            head = _FusedVocabHead(
+                items=unembed.T.astype(jnp.float32),
+                codes=vocab_index.codes, range_id=vocab_index.range_id,
+                upper=vocab_index.upper, A=vocab_index.A,
+                code_len=vocab_index.code_len,
+                hash_bits=vocab_index.hash_bits, eps=vocab_index.eps,
+                calib=vocab_index.calib)
+            self._fused_eng = QueryEngine(head, engine="fused",
+                                          quantized=quantized,
+                                          tracker=self.tracker)
+            self.decode_fn = make_decode_step(cfg, mesh,
+                                              return_hidden=True)
+            return
+        if quantized:
+            raise ValueError("quantized is a fused-head arm; pass "
+                             "engine='fused'")
         meta = ((vocab_index.code_len, vocab_index.hash_bits,
                  vocab_index.eps) if lsh_decode else None)
         self._vidx_arrays = (dict(codes=vocab_index.codes,
@@ -446,6 +493,12 @@ class BatchedServer:
                 tok = self._streaming_topk(hidden)
             elif self.sharded_index is not None:
                 tok = self._sharded_topk(hidden)
+            elif self._fused_eng is not None:
+                # monotone final softcaps commute with top-1, so the cap
+                # is skipped (same argument as the streaming head)
+                _, ids = self._fused_eng.query(
+                    hidden.astype(jnp.float32), 1, self.num_probe)
+                tok = ids[:, 0].astype(jnp.int32)
             elif self.lsh_decode:
                 _, ids = lm_head.lsh_topk_tokens(
                     self.vocab_index, hidden, unembed, k=1,
@@ -479,7 +532,8 @@ class BatchedServer:
             pos = jnp.asarray(S0 + t, jnp.int32)
             args = (self.params, tok, caches, pos)
             if self.streaming_index is not None \
-                    or self.sharded_index is not None:
+                    or self.sharded_index is not None \
+                    or self._fused_eng is not None:
                 with span_or_null(tr, "repro.serve.decode_step") as sp:
                     hidden, caches = self.decode_fn(*args)
                     sp.sync(hidden)

@@ -108,6 +108,29 @@ def mips_topk_cost(q: int, n: int, d: int, k: int) -> Dict[str, float]:
     return {m: rr[m] + tk[m] for m in ("flops", "hbm_bytes")}
 
 
+def fused_query_cost(q: int, total: int, d: int, k: int,
+                     kprime: int) -> Dict[str, float]:
+    """Fused single-pass query op (kernels/fused_query.py): CSR position
+    walk + phase-1 scoring of the planned candidate width against the
+    (possibly int8) payload + streaming top-k' merge + f32 rescore of the
+    k' survivors. The byte model charges the int8 candidate-row traffic
+    (one byte per element) plus the per-item f32 scale — the 4x phase-1
+    read reduction vs the staged f32 re-rank is exactly what the fusion
+    buys on the gather side."""
+    kp, kk = max(2, int(kprime)), max(2, int(k))
+    flops = (q * total                       # CSR position walk
+             + 2.0 * q * total * d           # phase-1 dot per candidate
+             + q * total * math.log2(kp)     # streaming top-k' merge
+             + 2.0 * q * kp * d              # f32 rescore of survivors
+             + q * kp * math.log2(kk))       # final top-k
+    bytes_ = (q * total * (d + F32)          # int8 rows + per-item scale
+              + F32 * q * d                  # query block
+              + F32 * q * kp * d             # f32 survivor rows
+              + (F32 + WORD) * q * kk        # (vals, pos) result
+              + WORD * 2 * q * total)        # cum/starts walk + positions
+    return {"flops": float(flops), "hbm_bytes": float(bytes_)}
+
+
 def query_stage_costs(shape: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
     """Per-stage predicted {flops, hbm_bytes} for one served batch.
 

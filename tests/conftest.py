@@ -6,7 +6,9 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: long-running tests (subprocess compiles)")
+        "markers",
+        "slow: heaviest cases (hypothesis matrices, subprocess compiles) "
+        "— CI runs them as their own tier-1 shard (-m slow)")
 
 
 try:

@@ -24,6 +24,7 @@ if a strategy cannot be sampled.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
@@ -87,6 +88,7 @@ def assert_ordered_subset(small: np.ndarray, big: np.ndarray):
             "shared candidates changed relative order between plans"
 
 
+@pytest.mark.slow
 @settings(**SETTINGS)
 @given(longtail_params())
 def test_plans_nest_across_targets(p):
@@ -105,6 +107,7 @@ def test_plans_nest_across_targets(p):
         prev_budget, prev_cand = pl.budgets, cand
 
 
+@pytest.mark.slow
 @settings(**SETTINGS)
 @given(longtail_params(), st.sampled_from(["simple", "l2_alsh",
                                            "sign_alsh"]))
@@ -139,6 +142,7 @@ def test_engines_agree_on_planned_budgets(p, family):
                                    rtol=2e-6, atol=2e-6)
 
 
+@pytest.mark.slow
 @settings(**SETTINGS)
 @given(longtail_params())
 def test_recall_meets_planner_contract(p):

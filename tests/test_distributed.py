@@ -249,6 +249,7 @@ SUBPROCESS_TEST = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_parity_on_8_devices():
     """Real 8-way collectives in a subprocess (device count locks at jax
     init, so the main pytest process stays 1-device): the full family x

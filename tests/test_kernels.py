@@ -100,6 +100,12 @@ _ZERO_CASES = [
     ("bucket_gather num_probe=0", lambda impl: ops.bucket_gather(
         jnp.zeros((4, 3), jnp.int32), jnp.zeros((4, 2), jnp.int32), 0,
         impl=impl)),
+    ("fused_query N=0", lambda impl: ops.fused_query(
+        jnp.ones((2, 4)), jnp.zeros((2, 3), jnp.int32),
+        jnp.zeros((2, 2), jnp.int32), jnp.ones((0, 4)), 4, 2, impl=impl)),
+    ("fused_query total=0", lambda impl: ops.fused_query(
+        jnp.ones((2, 4)), jnp.zeros((2, 3), jnp.int32),
+        jnp.zeros((2, 2), jnp.int32), jnp.ones((8, 4)), 0, 2, impl=impl)),
 ]
 
 

@@ -147,6 +147,7 @@ def test_contract_refuses_deeper_k_than_calibrated(calibrated,
     calibrated.query(longtail_ds.queries[:2], 5, recall_target=0.9)
 
 
+@pytest.mark.slow
 def test_planned_beats_static_at_same_recall(calibrated, longtail_ds):
     """The acceptance direction at test scale: the planned budget meets
     its target with fewer probed candidates than the smallest static

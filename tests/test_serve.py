@@ -102,6 +102,41 @@ def test_batched_server_bucket_engine(small_lm):
                                   np.asarray(out_exact))
 
 
+def test_batched_server_fused_engine(small_lm):
+    """engine="fused" decode (DESIGN.md §17): the single-pass head at full
+    probe budget produces identical greedy output to the exact server —
+    the jitted step returns the hidden state and the fused kernel scores
+    the traversal host-dispatched, like the streaming/sharded heads."""
+    cfg, params = small_lm
+    mesh = make_local_mesh()
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    vidx = lm_head.build_vocab_index(unembed, jax.random.PRNGKey(5),
+                                     code_len=64, num_ranges=16)
+    server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                 lsh_decode=True, vocab_index=vidx,
+                                 num_probe=cfg.padded_vocab,
+                                 engine="fused")
+    exact_server = serve.BatchedServer(cfg, params, mesh, max_seq=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 5), 0,
+                                 cfg.vocab)
+    out_fused = server.generate(prompts, steps=3)
+    out_exact = exact_server.generate(prompts, steps=3)
+    np.testing.assert_array_equal(np.asarray(out_fused),
+                                  np.asarray(out_exact))
+    # quantized arm serves without error (greedy parity is tolerance-
+    # bounded, not exact — covered by the recall-delta conformance test)
+    q_server = serve.BatchedServer(cfg, params, mesh, max_seq=32,
+                                   lsh_decode=True, vocab_index=vidx,
+                                   num_probe=cfg.padded_vocab,
+                                   engine="fused", quantized=True)
+    out_q = q_server.generate(prompts, steps=3)
+    assert out_q.shape == out_exact.shape
+    with pytest.raises(ValueError, match="fused"):
+        serve.BatchedServer(cfg, params, mesh, lsh_decode=True,
+                            vocab_index=vidx, engine="bucket",
+                            quantized=True)
+
+
 def test_bucket_arrays_roundtrip(small_lm):
     """The replicated-array plumbing the decode step (and the streaming
     path) relies on: a bucket store shipped as plain arrays and rebuilt on

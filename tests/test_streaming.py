@@ -94,6 +94,7 @@ def test_delta_scan_matches_ref(q, c, w):
 # -- merge parity (the acceptance criterion) ---------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("impl", ["ref", "pallas"])
 @pytest.mark.parametrize("kind", ["range", "simple"])
 def test_parity_any_interleaving(ds, pool, kind, impl):
